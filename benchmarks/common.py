@@ -1,0 +1,35 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.sim import SimConfig, run_workflow
+from repro.workloads import make_workflow
+
+# Simulation scales (virtual time is exact; scale only bounds host CPU time
+# spent simulating).  Patterns run at the paper's full scale.
+SCALES = {
+    "rnaseq": 0.1, "sarek": 0.06, "chipseq": 0.08, "rangeland": 0.04,
+    "syn_blast": 0.5, "syn_bwa": 0.5, "syn_cycles": 0.5, "syn_genome": 0.5,
+    "syn_montage": 0.5, "syn_seismology": 0.5, "syn_soykb": 0.5,
+    "all_in_one": 1.0, "chain": 1.0, "fork": 1.0, "group": 1.0,
+    "group_multiple": 1.0,
+}
+
+
+def wf_for(name: str, seed: int = 0):
+    return make_workflow(name, scale=SCALES[name], seed=seed)
+
+
+def run(name: str, strategy: str, dfs: str = "ceph", **cfg):
+    wf = wf_for(name)
+    t0 = time.time()
+    res = run_workflow(wf, strategy, SimConfig(dfs=dfs, **cfg))
+    res.wall = time.time() - t0
+    return res
+
+
+def emit(row: str) -> None:
+    print(row, flush=True)
+    sys.stdout.flush()

@@ -1,0 +1,25 @@
+"""Paper Fig. 4: WOW data overhead (speculative replica bytes / unique
+intermediate bytes) vs the DFS baselines (Ceph rep-2 = 100%, NFS = 0%)."""
+from __future__ import annotations
+
+from repro.workloads import ALL_WORKFLOWS
+
+from .common import emit, run
+
+
+def main() -> list[dict]:
+    rows = []
+    emit("fig4,workflow,dfs,wow_overhead_pct,ceph_baseline_pct,"
+         "nfs_baseline_pct")
+    for name in ALL_WORKFLOWS:
+        for dfs in ("ceph", "nfs"):
+            w = run(name, "wow", dfs)
+            row = {"workflow": name, "dfs": dfs,
+                   "overhead": 100 * w.data_overhead}
+            rows.append(row)
+            emit(f"fig4,{name},{dfs},{row['overhead']:.1f},100,0")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

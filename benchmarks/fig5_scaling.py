@@ -1,0 +1,36 @@
+"""Paper Fig. 5: makespan + efficiency scaling over 1..8 nodes, WOW vs CWS.
+efficiency(n) = makespan(1) / (makespan(n) * n)."""
+from __future__ import annotations
+
+from repro.sim import SimConfig, run_workflow
+
+from .common import SCALES, emit, wf_for
+
+WORKFLOWS = ["chipseq", "chain", "all_in_one"]
+NODES = [1, 2, 4, 6, 8]
+
+
+def main() -> list[dict]:
+    rows = []
+    emit("fig5,workflow,dfs,strategy,nodes,makespan_min,efficiency_pct")
+    for name in WORKFLOWS:
+        wf = wf_for(name)
+        for dfs in ("ceph", "nfs"):
+            for strat in ("cws", "wow"):
+                base = None
+                for n in NODES:
+                    r = run_workflow(wf, strat,
+                                     SimConfig(dfs=dfs, n_nodes=n))
+                    if n == 1:
+                        base = r.makespan
+                    eff = 100 * base / (r.makespan * n)
+                    rows.append({"workflow": name, "dfs": dfs,
+                                 "strategy": strat, "nodes": n,
+                                 "makespan": r.makespan, "eff": eff})
+                    emit(f"fig5,{name},{dfs},{strat},{n},"
+                         f"{r.makespan / 60:.1f},{eff:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Kernel micro-benchmarks (CPU host): ref jnp path vs Pallas interpret path
+(correctness-grade timing only -- real perf targets TPU; see §Roofline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import (attention_reference,
+                                               flash_attention)
+from repro.kernels.moe_gmm.ops import grouped_ffn, grouped_ffn_reference
+
+from .common import emit
+
+
+def timeit(fn, *args, n=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / n * 1e6
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (2, 256, 8, 64))
+    k = jax.random.normal(ks[1], (2, 256, 4, 64))
+    v = jax.random.normal(ks[2], (2, 256, 4, 64))
+    ref = jax.jit(lambda q, k, v: attention_reference(q, k, v))
+    emit(f"kernels,flash_attention_ref,{timeit(ref, q, k, v):.0f},"
+         f"B2xS256xH8xhd64")
+    emit(f"kernels,flash_attention_interpret,"
+         f"{timeit(lambda *a: flash_attention(*a, interpret=True), q, k, v):.0f},"
+         f"B2xS256xH8xhd64")
+    buf = 0.5 * jax.random.normal(ks[0], (2, 8, 32, 128))
+    wi = jax.random.normal(ks[1], (8, 128, 256)) * 0.1
+    wo = jax.random.normal(ks[2], (8, 256, 128)) * 0.1
+    refg = jax.jit(lambda b, wi, wg, wo: grouped_ffn_reference(b, wi, wg, wo))
+    emit(f"kernels,moe_gmm_ref,{timeit(refg, buf, wi, wi, wo):.0f},"
+         f"B2xE8xC32xD128xF256")
+    emit(f"kernels,moe_gmm_interpret,"
+         f"{timeit(lambda *a: grouped_ffn(*a, interpret=True), buf, wi, wi, wo):.0f},"
+         f"B2xE8xC32xD128xF256")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Benchmark aggregator: one function per paper table/figure + the
+framework-side benches.  Prints ``name,...`` CSV lines.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table2,table3,...]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import time
+
+
+def roofline_summary(dryrun_dir: str = "experiments/dryrun") -> None:
+    """Summarize the dry-run roofline JSONs (if the matrix has been run)."""
+    files = sorted(glob.glob(f"{dryrun_dir}/*.json"))
+    if not files:
+        print("roofline,missing,run `python -m repro.launch.dryrun --all "
+              "--multi-pod both --out experiments/dryrun` first")
+        return
+    print("roofline,arch,shape,mesh,compute_ms,memory_ms,collective_ms,"
+          "bottleneck,useful_ratio,peak_fraction")
+    for fn in files:
+        with open(fn) as f:
+            r = json.load(f)
+        if r.get("status") != "ok":
+            continue
+        rl = r["roofline"]
+        print(f"roofline,{r['arch']},{r['shape']},{r['mesh']},"
+              f"{rl['compute_s'] * 1e3:.1f},{rl['memory_s'] * 1e3:.1f},"
+              f"{rl['collective_s'] * 1e3:.1f},{rl['bottleneck']},"
+              f"{rl['useful_ratio']:.2f},{rl['peak_fraction']:.4f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: table2,table3,fig4,fig5,"
+                         "scheduler,kernels,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name: str) -> bool:
+        return only is None or name in only
+
+    t0 = time.time()
+    if want("table2"):
+        from .table2_execution import main as t2
+        t2()
+    if want("table3"):
+        from .table3_network import main as t3
+        t3()
+    if want("fig4"):
+        from .fig4_overhead import main as f4
+        f4()
+    if want("fig5"):
+        from .fig5_scaling import main as f5
+        f5()
+    if want("scheduler"):
+        from .scheduler_scale import main as ss
+        ss()
+    if want("kernels"):
+        from .kernels import main as km
+        km()
+    if want("roofline"):
+        roofline_summary()
+    print(f"benchmarks,total_wall_s,{time.time() - t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

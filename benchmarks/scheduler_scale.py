@@ -1,0 +1,49 @@
+"""Scheduler-iteration latency vs cluster size (paper §IV-C reports 11 ms
+median ILP time on 8 nodes; production target is 1000+ nodes)."""
+from __future__ import annotations
+
+import random
+import time
+
+from repro.core import (AssignmentProblem, DataPlacementService, FileSpec,
+                        NodeState, TaskSpec, WowScheduler, solve)
+
+from .common import emit
+
+GiB = 1024 ** 3
+
+
+def build(n_nodes: int, n_ready: int, seed: int = 0):
+    rng = random.Random(seed)
+    nodes = {i: NodeState(i, 128 * GiB, 16.0) for i in range(n_nodes)}
+    dps = DataPlacementService(seed=seed)
+    sched = WowScheduler(nodes, dps)
+    for t in range(n_ready):
+        fid = t
+        host = rng.randrange(n_nodes)
+        dps.register_file(FileSpec(id=fid, size=rng.randint(1, 4) * GiB,
+                                   producer=-1), host)
+        task = TaskSpec(id=t, abstract="a", mem=4 * GiB, cores=2.0,
+                        inputs=(fid,), priority=rng.uniform(1, 10))
+        sched.submit(task)
+    return sched
+
+
+def main() -> list[dict]:
+    rows = []
+    emit("scheduler_scale,n_nodes,n_ready_tasks,iteration_ms,"
+         "actions_per_iteration")
+    for n_nodes, n_ready in [(8, 64), (32, 256), (128, 1024), (512, 2048),
+                             (1024, 4096)]:
+        sched = build(n_nodes, n_ready)
+        t0 = time.time()
+        actions = sched.schedule()
+        dt = (time.time() - t0) * 1000
+        rows.append({"nodes": n_nodes, "tasks": n_ready, "ms": dt,
+                     "actions": len(actions)})
+        emit(f"scheduler_scale,{n_nodes},{n_ready},{dt:.1f},{len(actions)}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper Table II: execution behaviour of 16 workflows x {orig,cws,wow} x
+{ceph,nfs} on 8 nodes / 1 Gbit.  Reports makespan (orig absolute, deltas for
+cws/wow), allocated CPU-hours deltas, and WOW COP stats."""
+from __future__ import annotations
+
+from repro.workloads import ALL_WORKFLOWS
+
+from .common import emit, run
+
+
+def main(dfs_list=("ceph", "nfs")) -> list[dict]:
+    rows = []
+    emit("table2,workflow,dfs,orig_makespan_min,cws_delta_pct,"
+         "wow_delta_pct,orig_cpu_h,cws_cpu_delta_pct,wow_cpu_delta_pct,"
+         "wow_pct_no_cop,wow_pct_cops_used")
+    for name in ALL_WORKFLOWS:
+        for dfs in dfs_list:
+            res = {s: run(name, s, dfs) for s in ("orig", "cws", "wow")}
+            o = res["orig"]
+            def dm(s):
+                return 100 * (res[s].makespan - o.makespan) / o.makespan
+            def dc(s):
+                return 100 * (res[s].cpu_alloc_hours - o.cpu_alloc_hours) \
+                    / max(o.cpu_alloc_hours, 1e-9)
+            row = {
+                "workflow": name, "dfs": dfs,
+                "orig_makespan_min": o.makespan / 60,
+                "cws_delta_pct": dm("cws"), "wow_delta_pct": dm("wow"),
+                "orig_cpu_h": o.cpu_alloc_hours,
+                "cws_cpu_delta_pct": dc("cws"),
+                "wow_cpu_delta_pct": dc("wow"),
+                "wow_pct_no_cop": res["wow"].pct_no_cop,
+                "wow_pct_cops_used": res["wow"].pct_cops_used,
+            }
+            rows.append(row)
+            emit("table2,{workflow},{dfs},{orig_makespan_min:.1f},"
+                 "{cws_delta_pct:+.1f},{wow_delta_pct:+.1f},"
+                 "{orig_cpu_h:.1f},{cws_cpu_delta_pct:+.1f},"
+                 "{wow_cpu_delta_pct:+.1f},{wow_pct_no_cop:.1f},"
+                 "{wow_pct_cops_used:.1f}".format(**row))
+    wins = sum(r["wow_delta_pct"] < 0 for r in rows)
+    emit(f"table2,SUMMARY,wow_improves,{wins}/{len(rows)}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

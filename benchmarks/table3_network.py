@@ -1,0 +1,34 @@
+"""Paper Table III: makespan change when bandwidth doubles (1 -> 2 Gbit).
+Methods that already avoid the network (WOW) should benefit least."""
+from __future__ import annotations
+
+from .common import emit, run
+
+WORKFLOWS = ["all_in_one", "chain", "fork", "group", "group_multiple",
+             "chipseq"]
+
+
+def main() -> list[dict]:
+    rows = []
+    emit("table3,workflow,dfs,orig_delta_pct,cws_delta_pct,wow_delta_pct")
+    for name in WORKFLOWS:
+        for dfs in ("ceph", "nfs"):
+            deltas = {}
+            for strat in ("orig", "cws", "wow"):
+                m1 = run(name, strat, dfs, net_bw=125e6).makespan
+                m2 = run(name, strat, dfs, net_bw=250e6).makespan
+                deltas[strat] = 100 * (m2 - m1) / m1
+            row = {"workflow": name, "dfs": dfs,
+                   "orig": deltas["orig"], "cws": deltas["cws"],
+                   "wow": deltas["wow"]}
+            rows.append(row)
+            emit(f"table3,{name},{dfs},{deltas['orig']:+.1f},"
+                 f"{deltas['cws']:+.1f},{deltas['wow']:+.1f}")
+    less_dependent = sum(r["wow"] > r["orig"] for r in rows)
+    emit(f"table3,SUMMARY,wow_less_network_dependent,"
+         f"{less_dependent}/{len(rows)}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Phi-4-mini 3.8B dense: RoPE SwiGLU GQA.  [arXiv:2412.08905; hf]"""
+from ..models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi4-mini-3.8b", family="dense",
+    n_layers=32, d_model=3072, n_heads=24, n_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab=200064,
+    param_dtype="bfloat16", compute_dtype="bfloat16", remat="full",
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab=512,
+    param_dtype="float32", compute_dtype="float32", remat="none",
+)

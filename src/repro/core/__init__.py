@@ -1,0 +1,19 @@
+"""WOW core: the paper's contribution (3-step scheduler + DPS + priorities).
+
+Environment-free -- the discrete-event simulator (`repro.sim`) and the JAX
+runtime adapter (`repro.runtime`) both drive these classes.
+"""
+from .dps import DataPlacementService
+from .ilp import AssignmentProblem, solve, solve_exact, solve_greedy
+from .priority import abstract_ranks, assign_priorities, priority_value
+from .scheduler import WowScheduler
+from .types import (Action, CopPlan, DFS_LOC, FileSpec, NodeState, StartCop,
+                    StartTask, TaskSpec, Transfer)
+
+__all__ = [
+    "Action", "AssignmentProblem", "CopPlan", "DFS_LOC",
+    "DataPlacementService", "FileSpec", "NodeState", "StartCop", "StartTask",
+    "TaskSpec", "Transfer", "WowScheduler", "abstract_ranks",
+    "assign_priorities", "priority_value", "solve", "solve_exact",
+    "solve_greedy",
+]

@@ -1,0 +1,154 @@
+"""Data Placement Service (paper §III-C).
+
+The DPS owns every intermediate file: sizes, producer, and the set of nodes
+holding a *valid* replica.  Replicas are created exclusively through COPs.
+For a (task, target-node) request it plans the cheapest COP:
+
+  1. list the task's input files missing on the target, sorted by size
+     (largest first),
+  2. for each file pick the source replica on the node with the lowest load
+     *already assigned within this COP* (first file: all ties, resolved by a
+     seeded RNG, exactly like the paper's random tie-break),
+  3. price = w_t * total_traffic + w_l * max participating-node load, with
+     equal weights (paper: "we give equal weight to both aspects").
+
+The DPS is deliberately environment-free: the simulator and the JAX runtime
+both drive it through this interface.
+"""
+from __future__ import annotations
+
+import random
+
+from .types import CopPlan, FileSpec, NodeId, Transfer
+
+# Equal weights for the two price components (§III-C).
+W_TRAFFIC = 0.5
+W_MAXLOAD = 0.5
+
+
+class DataPlacementService:
+    def __init__(self, seed: int = 0) -> None:
+        self._files: dict[int, FileSpec] = {}
+        self._locations: dict[int, set[NodeId]] = {}
+        self._rng = random.Random(seed)
+        self._next_cop_id = 0
+        # total bytes moved through COPs, for the Fig.4 overhead metric
+        self.cop_bytes_total = 0
+
+    # ------------------------------------------------------------------ files
+    def register_file(self, f: FileSpec, location: NodeId) -> None:
+        """Called when a task finishes and its output stays on the producing
+        node (§III-B: data is left where it was produced)."""
+        self._files[f.id] = f
+        self._locations[f.id] = {location}
+
+    def file(self, file_id: int) -> FileSpec:
+        return self._files[file_id]
+
+    def has_file(self, file_id: int) -> bool:
+        return file_id in self._files
+
+    def locations(self, file_id: int) -> set[NodeId]:
+        return set(self._locations.get(file_id, ()))
+
+    def invalidate(self, file_id: int, only_valid: NodeId) -> None:
+        """File manipulated in place (§IV-B): one valid location remains."""
+        self._locations[file_id] = {only_valid}
+
+    def delete_replicas(self, file_id: int, keep: int = 0) -> int:
+        """GC once all consumers are done; returns bytes reclaimed."""
+        locs = self._locations.get(file_id)
+        if not locs:
+            return 0
+        size = self._files[file_id].size
+        drop = max(0, len(locs) - keep)
+        if keep == 0:
+            self._locations.pop(file_id, None)
+        else:
+            keeplist = sorted(locs)[:keep]
+            self._locations[file_id] = set(keeplist)
+        return drop * size
+
+    def replica_count(self, file_id: int) -> int:
+        return len(self._locations.get(file_id, ()))
+
+    # ----------------------------------------------------------------- status
+    def is_prepared(self, input_ids: tuple[int, ...], node: NodeId) -> bool:
+        """A node is *prepared* when every intermediate input has a valid
+        replica on it (workflow inputs in the DFS are readable anywhere)."""
+        return all(node in self._locations.get(f, ()) for f in input_ids)
+
+    def prepared_nodes(self, input_ids: tuple[int, ...],
+                       nodes: list[NodeId]) -> list[NodeId]:
+        if not input_ids:
+            return list(nodes)
+        # intersect replica sets, iterating over the rarest file first
+        sets = sorted((self._locations.get(f, set()) for f in input_ids),
+                      key=len)
+        inter = set(sets[0])
+        for s in sets[1:]:
+            inter &= s
+            if not inter:
+                return []
+        return [n for n in nodes if n in inter]
+
+    def missing_files(self, input_ids: tuple[int, ...],
+                      node: NodeId) -> list[FileSpec]:
+        return [self._files[f] for f in input_ids
+                if node not in self._locations.get(f, ())]
+
+    def missing_bytes(self, input_ids: tuple[int, ...], node: NodeId) -> int:
+        return sum(f.size for f in self.missing_files(input_ids, node))
+
+    # ------------------------------------------------------------------- COPs
+    def plan_cop(
+        self,
+        task_id: int,
+        input_ids: tuple[int, ...],
+        target: NodeId,
+        allowed_sources: set[NodeId] | None = None,
+    ) -> CopPlan | None:
+        """Greedy COP construction for preparing ``task_id`` on ``target``.
+
+        ``allowed_sources`` restricts source nodes (the scheduler passes the
+        set of nodes with spare COP slots so c_node holds for sources too).
+        Returns None when some missing file has no admissible replica.
+        """
+        missing = sorted(self.missing_files(input_ids, target),
+                         key=lambda f: (-f.size, f.id))
+        transfers: list[Transfer] = []
+        load: dict[NodeId, int] = {}
+        total = 0
+        for f in missing:
+            srcs = self._locations.get(f.id, set())
+            if allowed_sources is not None:
+                srcs = {s for s in srcs if s in allowed_sources or s == target}
+            srcs.discard(target)
+            if not srcs:
+                return None
+            lo = min(load.get(s, 0) for s in srcs)
+            pool = [s for s in sorted(srcs) if load.get(s, 0) == lo]
+            src = pool[self._rng.randrange(len(pool))] if len(pool) > 1 else pool[0]
+            transfers.append(Transfer(f.id, f.size, src, target))
+            load[src] = load.get(src, 0) + f.size
+            total += f.size
+        load[target] = total  # the target receives everything
+        price = W_TRAFFIC * total + W_MAXLOAD * (max(load.values()) if load else 0)
+        plan = CopPlan(id=self._next_cop_id, task_id=task_id, target=target,
+                       transfers=transfers, price=price)
+        self._next_cop_id += 1
+        return plan
+
+    def commit_cop(self, plan: CopPlan) -> None:
+        """All-or-nothing replica registration on COP success (§IV-C)."""
+        for t in plan.transfers:
+            self._locations.setdefault(t.file_id, set()).add(t.dst)
+        self.cop_bytes_total += plan.total_bytes
+
+    # --------------------------------------------------------------- metrics
+    def total_replica_bytes(self) -> int:
+        return sum(self._files[f].size * len(locs)
+                   for f, locs in self._locations.items())
+
+    def unique_bytes(self) -> int:
+        return sum(f.size for f in self._files.values())

@@ -1,0 +1,202 @@
+"""Step-1 assignment solver (paper §III-B, "Start ready tasks on prepared
+nodes").
+
+The problem: given ready tasks t_k = (mem, cores, N_prep, priority) and nodes
+with free (mem, cores), choose a binary assignment a_{k,l} maximizing
+sum(a_{k,l} * t_p) subject to
+
+    * each task assigned at most once,
+    * sum of assigned task memory  <= free node memory,
+    * sum of assigned task cores   <= free node cores,
+    * a_{k,l} = 0 unless node l is prepared for task k.
+
+The paper solves this with OR-Tools (median 11 ms, always optimal < 2 s).
+This container is offline, so we ship our own solver:
+
+* ``solve_exact``  -- depth-first branch & bound over tasks in priority
+  order with an optimistic remaining-priority bound.  Optimal; used when the
+  search space is small enough (the common case: the paper's instances are
+  tiny because N_prep is usually 1-2 nodes).
+* ``solve_greedy`` -- priority-descending best-fit with one swap-improvement
+  pass; used beyond the exact budget (e.g. 1000+ node clusters).
+
+``solve`` picks automatically and is deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .types import NodeState, TaskSpec
+
+# Budget of B&B nodes before falling back to greedy.  Exact instances in the
+# paper are tiny; this bound keeps worst-case latency low at huge scale.
+_EXACT_NODE_BUDGET = 200_000
+
+
+@dataclasses.dataclass
+class AssignmentProblem:
+    tasks: list[TaskSpec]                      # candidate tasks (T_run)
+    prepared: dict[int, list[int]]             # task id -> node ids (N_prep with free res.)
+    nodes: dict[int, NodeState]
+
+
+def _feasible(problem: AssignmentProblem) -> AssignmentProblem:
+    """Drop tasks with no prepared node that currently fits them."""
+    tasks, prepared = [], {}
+    for t in problem.tasks:
+        cands = [
+            n for n in problem.prepared.get(t.id, [])
+            if problem.nodes[n].free_mem >= t.mem
+            and problem.nodes[n].free_cores >= t.cores
+        ]
+        if cands:
+            tasks.append(t)
+            prepared[t.id] = cands
+    return AssignmentProblem(tasks, prepared, problem.nodes)
+
+
+def solve_exact(problem: AssignmentProblem,
+                node_budget: int = _EXACT_NODE_BUDGET) -> dict[int, int] | None:
+    """Branch & bound.  Returns {task_id: node_id} or None if budget blown."""
+    p = _feasible(problem)
+    tasks = sorted(p.tasks, key=lambda t: -t.priority)
+    n_ids = sorted({n for cands in p.prepared.values() for n in cands})
+    free_mem = {n: p.nodes[n].free_mem for n in n_ids}
+    free_cores = {n: p.nodes[n].free_cores for n in n_ids}
+
+    # suffix sums of priorities for the optimistic bound
+    suffix = [0.0] * (len(tasks) + 1)
+    for i in range(len(tasks) - 1, -1, -1):
+        suffix[i] = suffix[i + 1] + tasks[i].priority
+
+    best_val = -1.0
+    best_assign: dict[int, int] = {}
+    cur_assign: dict[int, int] = {}
+    visited = 0
+    aborted = False
+
+    def rec(i: int, val: float) -> None:
+        nonlocal best_val, best_assign, visited, aborted
+        if aborted:
+            return
+        visited += 1
+        if visited > node_budget:
+            aborted = True
+            return
+        if val + suffix[i] <= best_val:
+            return  # cannot beat incumbent
+        if i == len(tasks):
+            if val > best_val:
+                best_val = val
+                best_assign = dict(cur_assign)
+            return
+        t = tasks[i]
+        # branch: assign to each feasible prepared node (greedy order helps
+        # the bound: most-free node first)
+        cands = sorted(
+            (n for n in p.prepared[t.id]
+             if free_mem[n] >= t.mem and free_cores[n] >= t.cores),
+            key=lambda n: (-(free_cores[n]), -(free_mem[n]), n),
+        )
+        for n in cands:
+            free_mem[n] -= t.mem
+            free_cores[n] -= t.cores
+            cur_assign[t.id] = n
+            rec(i + 1, val + t.priority)
+            del cur_assign[t.id]
+            free_mem[n] += t.mem
+            free_cores[n] += t.cores
+            if aborted:
+                return
+        # branch: skip the task
+        rec(i + 1, val)
+
+    rec(0, 0.0)
+    if aborted:
+        return None
+    return best_assign
+
+
+def solve_greedy(problem: AssignmentProblem) -> dict[int, int]:
+    """Priority-descending best-fit + one swap/repair pass.
+
+    Deterministic; O(T log T + T * |N_prep|).  At paper scale |N_prep| is
+    tiny, so this is effectively linear in the number of ready tasks.
+    """
+    p = _feasible(problem)
+    tasks = sorted(p.tasks, key=lambda t: (-t.priority, t.id))
+    free_mem = {n.id: n.free_mem for n in p.nodes.values()}
+    free_cores = {n.id: n.free_cores for n in p.nodes.values()}
+    assign: dict[int, int] = {}
+
+    def try_place(t: TaskSpec) -> bool:
+        cands = [n for n in p.prepared[t.id]
+                 if free_mem[n] >= t.mem and free_cores[n] >= t.cores]
+        if not cands:
+            return False
+        # best-fit: leave the *most* slack elsewhere -> place on the node
+        # where the task wastes the least spare capacity
+        n = min(cands, key=lambda n: (free_cores[n] - t.cores,
+                                      free_mem[n] - t.mem, n))
+        assign[t.id] = n
+        free_mem[n] -= t.mem
+        free_cores[n] -= t.cores
+        return True
+
+    skipped: list[TaskSpec] = []
+    for t in tasks:
+        if not try_place(t):
+            skipped.append(t)
+
+    # repair pass: a skipped higher-priority task may fit if we relocate one
+    # placed task to another of its prepared nodes.
+    by_id = {t.id: t for t in tasks}
+    for t in skipped:
+        placed_here = [
+            (tid, n) for tid, n in assign.items()
+            if n in p.prepared[t.id] and by_id[tid].priority < t.priority
+        ]
+        done = False
+        for tid, n in sorted(placed_here, key=lambda kv: by_id[kv[0]].priority):
+            other = by_id[tid]
+            # can `other` move somewhere else?
+            for m in p.prepared[other.id]:
+                if m == n:
+                    continue
+                if free_mem[m] >= other.mem and free_cores[m] >= other.cores:
+                    # relocate other -> m
+                    free_mem[n] += other.mem
+                    free_cores[n] += other.cores
+                    free_mem[m] -= other.mem
+                    free_cores[m] -= other.cores
+                    assign[other.id] = m
+                    if free_mem[n] >= t.mem and free_cores[n] >= t.cores:
+                        assign[t.id] = n
+                        free_mem[n] -= t.mem
+                        free_cores[n] -= t.cores
+                        done = True
+                    break
+            if done:
+                break
+    return assign
+
+
+def objective(problem: AssignmentProblem, assign: dict[int, int]) -> float:
+    by_id = {t.id: t for t in problem.tasks}
+    return sum(by_id[tid].priority for tid in assign)
+
+
+def solve(problem: AssignmentProblem) -> dict[int, int]:
+    """Exact when affordable, greedy otherwise (mirrors the paper's 10 s
+    OR-Tools cut-off, which their experiments never hit)."""
+    n_cand = sum(len(v) for v in problem.prepared.values())
+    if n_cand <= 64 or len(problem.tasks) <= 24:
+        exact = solve_exact(problem)
+        if exact is not None:
+            greedy = solve_greedy(problem)
+            # exact is optimal, but keep the safer of the two in case the
+            # bound aborted mid-way (exact returns None then, handled below)
+            if objective(problem, exact) >= objective(problem, greedy):
+                return exact
+            return greedy
+    return solve_greedy(problem)

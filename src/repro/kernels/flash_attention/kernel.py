@@ -1,0 +1,123 @@
+"""Pallas TPU flash attention (forward): blocked online softmax.
+
+Tiling: grid (B, H, Sq/bq, T/bk); the kv-block axis is innermost and TPU
+executes it sequentially per (b, h, i), so the running max / denominator /
+accumulator live in VMEM scratch across kv blocks.  Q/K/V blocks are
+(bq, hd) / (bk, hd) VMEM tiles; bq=bk=128 aligns with the MXU.
+
+Supports GQA (kv head = q head // group), causal masking, and sliding
+window.  Fully-masked kv blocks are skipped at block level.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 scale: float, causal: bool, window: int, bq: int, bk: int,
+                 n_kv: int, seq_q: int, seq_kv: int):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    # block-level skip: entire kv block out of the causal/window band
+    diag = seq_kv - seq_q                    # kv may be longer (prefix)
+    run = jnp.bool_(True)
+    if causal:
+        run &= (j * bk) <= (i * bq + bq - 1 + diag)
+    if window > 0:
+        run &= (j * bk + bk - 1) > (i * bq - window + diag)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale
+        mask = (k_pos < seq_kv) & (q_pos < seq_q)
+        if causal:
+            mask &= k_pos <= q_pos + diag
+        if window > 0:
+            mask &= k_pos > q_pos + diag - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_ref[:, 0] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[:, 0] = m_new
+        l_ref[:, 0] = l_new
+
+    @pl.when(j == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom[:, None]).astype(
+            o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           scale: float | None = None, bq: int = 128,
+                           bk: int = 128, interpret: bool = False):
+    """q (B,S,H,hd), k/v (B,T,K,hd) -> (B,S,H,hd)."""
+    b, s, h, hd = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    if h % kh:
+        raise ValueError("n_heads must be a multiple of n_kv_heads")
+    g = h // kh
+    scale = hd ** -0.5 if scale is None else scale
+    bq = min(bq, max(8, 1 << (s - 1).bit_length() if s < bq else bq))
+    bk = min(bk, max(8, 1 << (t - 1).bit_length() if t < bk else bk))
+    pad_q = (-s) % bq
+    pad_k = (-t) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    sq, skv = s + pad_q, t + pad_k
+    n_q, n_kv = sq // bq, skv // bk
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window, bq=bq,
+        bk=bk, n_kv=n_kv, seq_q=s, seq_kv=t)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, hd), lambda b_, h_, i, j: (b_, i, h_, 0)),
+            pl.BlockSpec((1, bk, 1, hd),
+                         lambda b_, h_, i, j, g=g: (b_, j, h_ // g, 0)),
+            pl.BlockSpec((1, bk, 1, hd),
+                         lambda b_, h_, i, j, g=g: (b_, j, h_ // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, hd),
+                               lambda b_, h_, i, j: (b_, i, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :s]

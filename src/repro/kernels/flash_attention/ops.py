@@ -1,0 +1,20 @@
+"""jit'd public wrapper around the flash-attention Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_attention_pallas
+from .ref import attention_reference
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window",
+                                             "interpret", "bq", "bk"))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    interpret: bool = False, bq: int = 128, bk: int = 128):
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  bq=bq, bk=bk, interpret=interpret)
+
+
+__all__ = ["flash_attention", "attention_reference"]

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash attention (GQA, causal, sliding window)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def attention_reference(q, k, v, causal: bool = True, window: int = 0,
+                        scale: float | None = None) -> jax.Array:
+    """q (B,S,H,hd), k/v (B,T,K,hd) with H a multiple of K.  fp32 softmax."""
+    b, s, h, hd = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = hd ** -0.5 if scale is None else scale
+    qg = q.reshape(b, s, kh, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores * scale
+    rows = jnp.arange(s)[:, None]
+    cols = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= cols <= rows + (t - s)
+    if window > 0:
+        mask &= cols > rows + (t - s) - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, hd)

@@ -1,0 +1,19 @@
+"""jit'd wrapper for the grouped expert FFN kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import grouped_ffn_pallas
+from .ref import grouped_ffn_reference
+
+
+@functools.partial(jax.jit, static_argnames=("act", "bf", "interpret"))
+def grouped_ffn(buf, w_in, w_gate, w_out, act: str = "swiglu",
+                bf: int = 256, interpret: bool = False):
+    return grouped_ffn_pallas(buf, w_in, w_gate, w_out, act=act, bf=bf,
+                              interpret=interpret)
+
+
+__all__ = ["grouped_ffn", "grouped_ffn_reference"]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the grouped expert FFN."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_ffn_reference(buf, w_in, w_gate, w_out, act: str = "swiglu"):
+    """buf (B,E,C,D); w_in/w_gate (E,D,F); w_out (E,F,D) -> (B,E,C,D)."""
+    h = jnp.einsum("becd,edf->becf", buf, w_in)
+    if act == "swiglu":
+        g = jnp.einsum("becd,edf->becf", buf, w_gate)
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("becf,efd->becd", h, w_out)

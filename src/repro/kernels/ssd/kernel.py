@@ -1,0 +1,77 @@
+"""Pallas TPU kernel for the Mamba2 SSD intra-chunk computation.
+
+Per (batch, chunk, head) grid cell, entirely in VMEM:
+
+    CB      = C @ B^T                      (L,L)   MXU matmul
+    M       = CB * exp(seg) * dt_j * causal
+    y_intra = M @ X_h                      (L,L)@(L,P) MXU matmul
+    state   = (exp(cum_L - cum) * dt * B)^T @ X_h   (N,L)@(L,P)
+
+L (chunk) = 128-256 and P = 64 keep every tile MXU-aligned; the (L,L)
+decay matrix never leaves VMEM -- this is the memory win over the XLA path,
+which materializes the (B,NC,L,L,H) tensor in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.0 ** 30
+
+
+def _ssd_kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref, y_ref, st_ref, *,
+                l: int):
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)        # (L,P)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)         # (L,)
+    cum = cum_ref[0, 0, :, 0].astype(jnp.float32)       # (L,)
+    bm = b_ref[0, 0, :, :].astype(jnp.float32)          # (L,N)
+    cm = c_ref[0, 0, :, :].astype(jnp.float32)          # (L,N)
+
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (L,L)
+    seg = cum[:, None] - cum[None, :]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    decay = jnp.exp(jnp.where(rows >= cols, seg, NEG_INF))
+    m = cb * decay * dt[None, :]
+    y_ref[0, 0, :, 0, :] = jax.lax.dot_general(
+        m, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+    w_state = jnp.exp(cum[l - 1] - cum) * dt             # (L,)
+    bw = bm * w_state[:, None]                           # (L,N)
+    st_ref[0, 0, 0, :, :] = jax.lax.dot_general(
+        bw, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(st_ref.dtype)
+
+
+def ssd_intra_chunk_pallas(xc, dtc, cum, bc, cc, *, interpret: bool = False):
+    """xc (B,NC,L,H,P), dtc/cum (B,NC,L,H), bc/cc (B,NC,L,N) ->
+    (y_intra (B,NC,L,H,P) f32, states (B,NC,H,N,P) f32)."""
+    bsz, nc, l, h, p = xc.shape
+    n = bc.shape[-1]
+    kernel = functools.partial(_ssd_kernel, l=l)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(bsz, nc, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, l, 1, p), lambda b, c, hh: (b, c, 0, hh, 0)),
+            pl.BlockSpec((1, 1, l, 1), lambda b, c, hh: (b, c, 0, hh)),
+            pl.BlockSpec((1, 1, l, 1), lambda b, c, hh: (b, c, 0, hh)),
+            pl.BlockSpec((1, 1, l, n), lambda b, c, hh: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, l, n), lambda b, c, hh: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, l, 1, p), lambda b, c, hh: (b, c, 0, hh, 0)),
+            pl.BlockSpec((1, 1, 1, n, p), lambda b, c, hh: (b, c, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, nc, l, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, nc, h, n, p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xc, dtc, cum, bc, cc)
+    return y, st

@@ -1,0 +1,17 @@
+"""jit'd wrappers for the SSD kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import ssd_intra_chunk_pallas
+from .ref import ssd_intra_chunk_reference, ssd_reference
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(xc, dtc, cum, bc, cc, interpret: bool = False):
+    return ssd_intra_chunk_pallas(xc, dtc, cum, bc, cc, interpret=interpret)
+
+
+__all__ = ["ssd_intra_chunk", "ssd_intra_chunk_reference", "ssd_reference"]

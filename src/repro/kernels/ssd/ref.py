@@ -1,0 +1,58 @@
+"""Stepwise-recurrence oracle for the Mamba2 SSD primitive."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_reference(xh, dt, a_log, bmat, cmat, h_init=None):
+    """Direct SSM recurrence (the definition the chunked form must match).
+
+    xh (B,S,H,P), dt (B,S,H) post-softplus, a_log (H,) with A=-exp(a_log),
+    bmat/cmat (B,S,N).  Returns (y (B,S,H,P), h_final (B,H,N,P)).
+    """
+    bsz, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    x32 = xh.astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+    b32 = bmat.astype(jnp.float32)
+    c32 = cmat.astype(jnp.float32)
+
+    def step(hprev, inp):
+        xt, dtt, bt, ct = inp               # (B,H,P),(B,H),(B,N),(B,N)
+        da = jnp.exp(dtt * a)               # (B,H)
+        inc = jnp.einsum("bh,bn,bhp->bhnp", dtt, bt, xt)
+        hnew = hprev * da[..., None, None] + inc
+        yt = jnp.einsum("bn,bhnp->bhp", ct, hnew)
+        return hnew, yt
+
+    h0 = (jnp.zeros((bsz, h, n, p), jnp.float32) if h_init is None
+          else h_init.astype(jnp.float32))
+    h_final, ys = jax.lax.scan(
+        step, h0,
+        (x32.swapaxes(0, 1), dt32.swapaxes(0, 1),
+         b32.swapaxes(0, 1), c32.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(xh.dtype), h_final
+
+
+def ssd_intra_chunk_reference(xc, dtc, cum, bc, cc):
+    """Oracle for the intra-chunk part (matches ops.ssd_intra_chunk).
+
+    xc (B,NC,L,H,P), dtc (B,NC,L,H), cum (B,NC,L,H) = cumsum(dt*A),
+    bc/cc (B,NC,L,N).  Returns (y_intra (B,NC,L,H,P),
+    states (B,NC,H,N,P))."""
+    neg_inf = -2.0 ** 30
+    l = xc.shape[2]
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    causal = (jnp.arange(l)[:, None] >= jnp.arange(l)[None, :])
+    decay = jnp.exp(jnp.where(causal[None, None, :, :, None], seg, neg_inf))
+    cb = jnp.einsum("bcin,bcjn->bcij", cc.astype(jnp.float32),
+                    bc.astype(jnp.float32))
+    m = cb[..., None] * decay * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m, xc.astype(jnp.float32))
+    last = cum[:, :, -1:, :]
+    w_state = jnp.exp(last - cum) * dtc
+    states = jnp.einsum("bclh,bcln,bclhp->bchnp", w_state,
+                        bc.astype(jnp.float32), xc.astype(jnp.float32))
+    return y_intra, states

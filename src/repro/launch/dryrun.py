@@ -1,0 +1,255 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count on first init), which is why the docstring sits below them
+# and no __future__ import is used in this module.
+
+_DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+    with mesh:
+        lowered = jax.jit(step, in_shardings=..., out_shardings=...)\
+            .lower(**input_specs)
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())    # proves it fits
+        print(compiled.cost_analysis())      # FLOPs/bytes for the roofline
+
+plus the custom HLO walk (repro.roofline) for collective bytes and
+loop-corrected FLOPs, dumped as JSON for EXPERIMENTS.md §Dry-run/§Roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k
+    python -m repro.launch.dryrun --all --multi-pod both --out experiments/dryrun
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCHS, SHAPES, applicable, get_config
+from ..models import Model
+from ..optim import AdamW, AdamWConfig
+from ..roofline import analyze, model_flops
+from ..roofline.model import RooflineReport
+from .input_specs import batch_specs, cache_specs
+from .mesh import make_production_mesh
+from .shardings import (batch_shardings, cache_shardings, opt_shardings,
+                        param_shardings)
+from .steps import make_prefill_step, make_serve_step, make_train_step
+
+
+def _moment_dtype(cfg) -> str:
+    # bf16 Adam moments for the >100B-param MoE so ZeRO-1-sharded state
+    # fits HBM (see EXPERIMENTS §Dry-run)
+    return "bfloat16" if cfg.param_counts()["total"] > 1e11 else "float32"
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               cfg_overrides: dict | None = None, zero1: bool = True,
+               sharding_mode: str = "tp"):
+    """Returns (lowered, meta) for one cell."""
+    from ..models.common import set_sharding_mode
+    set_sharding_mode(sharding_mode)
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        return None, {"skipped": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = Model(cfg)
+    params_shape = jax.eval_shape(model.init, jax.random.key(0))
+    p_shard = param_shardings(params_shape, mesh, mode=sharding_mode)
+    bspec = batch_specs(cfg, shape)
+    b_shard = batch_shardings(bspec, mesh, mode=sharding_mode)
+
+    with mesh:
+        if shape.kind == "train":
+            opt = AdamW(AdamWConfig(moment_dtype=_moment_dtype(cfg)))
+            opt_shape = jax.eval_shape(opt.init, params_shape)
+            o_shard = opt_shardings(opt_shape, params_shape, mesh,
+                                    zero1=zero1, mode=sharding_mode)
+            state_shape = {"params": params_shape, "opt": opt_shape}
+            state_shard = {"params": p_shard, "opt": o_shard}
+            step = make_train_step(model, opt)
+            jitted = jax.jit(step, in_shardings=(state_shard, b_shard),
+                             out_shardings=(state_shard, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_shape, bspec)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(model)
+            # pin the output cache sharding, else GSPMD replicates the
+            # (L,B,S,K,hd) cache across the pod (TB-scale all-gathers)
+            out_shape = jax.eval_shape(step, params_shape, bspec)
+            oc_shard = cache_shardings(out_shape[1], cfg, mesh)
+            jitted = jax.jit(step, in_shardings=(p_shard, b_shard),
+                             out_shardings=(None, oc_shard))
+            lowered = jitted.lower(params_shape, bspec)
+        else:  # decode
+            cspec = cache_specs(cfg, shape)
+            c_shard = cache_shardings(cspec, cfg, mesh)
+            tok_shard = batch_shardings(
+                {"tokens": bspec["tokens"]}, mesh)["tokens"]
+            step = make_serve_step(model)
+            jitted = jax.jit(step,
+                             in_shardings=(p_shard, tok_shard, c_shard),
+                             out_shardings=(None, c_shard),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(params_shape, bspec["tokens"], cspec)
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "chips": 512 if multi_pod else 256,
+            "kind": shape.kind, "cfg": cfg, "mesh_obj": mesh}
+    return lowered, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True, cfg_overrides: dict | None = None,
+             zero1: bool = True, sharding_mode: str = "tp") -> dict:
+    t0 = time.time()
+    shape = SHAPES[shape_name]
+    try:
+        lowered, meta = lower_cell(arch, shape_name, multi_pod,
+                                   cfg_overrides, zero1=zero1,
+                                   sharding_mode=sharding_mode)
+    except Exception as e:  # lowering failure is a bug in our system
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "lower_error",
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:]}
+    if lowered is None:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": meta["skipped"]}
+    t_lower = time.time() - t0
+    try:
+        compiled = lowered.compile()
+    except Exception as e:
+        return {"arch": arch, "shape": shape_name, "mesh": meta["mesh"],
+                "status": "compile_error",
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:]}
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_d = {k: int(getattr(mem, k, 0)) for k in
+             ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "peak_memory_in_bytes",
+              "alias_size_in_bytes")}
+    cost = compiled.cost_analysis()
+    cost_d = {k: float(cost.get(k, 0.0)) for k in
+              ("flops", "bytes accessed", "transcendentals")}
+    chips = meta["chips"]
+    hlo = compiled.as_text()
+    cfg = meta["cfg"]
+    stats = analyze(
+        hlo, chips,
+        assume_bf16_activations=cfg.compute_dtype == "bfloat16")
+    mf = model_flops(cfg, shape.kind, shape.global_batch, shape.seq_len)
+    from ..roofline.kernel_model import flash_adjusted_bytes
+    flash_bytes, removed = flash_adjusted_bytes(stats, shape.seq_len)
+    rep = RooflineReport(
+        arch=arch, shape=shape_name, mesh=meta["mesh"], chips=chips,
+        flops_per_device=stats.flops,
+        bytes_per_device=stats.hbm_bytes,
+        collective_bytes_per_device=stats.collective_bytes,
+        collective_by_kind=stats.collective_by_kind,
+        model_flops_global=mf,
+    ).finalize()
+    out = {
+        "arch": arch, "shape": shape_name, "mesh": meta["mesh"],
+        "chips": chips, "kind": shape.kind, "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": mem_d,
+        "cost_analysis": cost_d,
+        "hlo_stats": {
+            "flops_per_device": stats.flops,
+            "hbm_bytes_per_device": stats.hbm_bytes,
+            "collective_bytes_per_device": stats.collective_bytes,
+            "collective_by_kind": stats.collective_by_kind,
+            "collective_counts": stats.collective_counts,
+            "while_trips": stats.while_trips,
+        },
+        "roofline": rep.row(),
+        "flash_kernel_estimate": {
+            "hbm_bytes_per_device": flash_bytes,
+            "score_bytes_removed": removed,
+            "memory_s": flash_bytes / 819e9,
+        },
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} x {meta['mesh']} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        print(f"   memory_analysis: {mem_d}")
+        print(f"   cost_analysis:   {cost_d}")
+        print(f"   roofline: compute={rep.compute_s*1e3:.2f}ms "
+              f"memory={rep.memory_s*1e3:.2f}ms "
+              f"collective={rep.collective_s*1e3:.2f}ms "
+              f"bottleneck={rep.bottleneck} "
+              f"useful={rep.useful_ratio:.2f} "
+              f"peak_frac={rep.peak_fraction:.3f}")
+        if removed > 0.01 * stats.hbm_bytes:
+            print(f"   flash-kernel est: memory={flash_bytes / 819e9 * 1e3:.2f}ms "
+                  f"(scores removed: {removed / 1e9:.0f}GB/device)")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["on", "off", "both"],
+                    default="off")
+    ap.add_argument("--out", default=None, help="JSON output dir")
+    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--sharding-mode", choices=["tp", "fsdp"], default="tp",
+                    help="tp: paper-faithful baseline; fsdp: optimized "
+                         "(EXPERIMENTS.md §Perf)")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        cells = [(a, s) for a in ARCHS for s in SHAPES]
+    else:
+        archs = [args.arch] if args.arch else ARCHS
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        cells = [(a, s) for a in archs for s in shapes]
+    pods = {"on": [True], "off": [False], "both": [False, True]}[
+        args.multi_pod]
+
+    results = []
+    for arch, shape in cells:
+        for mp in pods:
+            res = run_cell(arch, shape, mp, zero1=not args.no_zero1,
+                           sharding_mode=args.sharding_mode)
+            results.append(res)
+            if res["status"] not in ("ok", "skipped"):
+                print(f"!! {arch} x {shape} "
+                      f"{'multi' if mp else 'single'}: {res['status']}: "
+                      f"{res.get('error')}")
+            if args.out:
+                os.makedirs(args.out, exist_ok=True)
+                mesh_tag = "2x16x16" if mp else "16x16"
+                path = os.path.join(
+                    args.out, f"{arch}__{shape}__{mesh_tag}.json")
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1, default=str)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = len(results) - n_ok - n_skip
+    print(f"\nDRY-RUN SUMMARY: {n_ok} ok, {n_skip} skipped (documented), "
+          f"{n_err} errors / {len(results)} cells")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

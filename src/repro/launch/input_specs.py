@@ -1,0 +1,48 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns the batch tree for train/prefill;
+decode adds the KV/state cache via ``jax.eval_shape`` over
+``init_decode_cache``.  Modality frontends are stubs: whisper gets
+precomputed frame embeddings, llava gets patch features.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models import Model
+from ..models.common import dtype_of
+from ..models.config import ArchConfig
+from .shapes_util import ShapeSpec
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    cdt = dtype_of(cfg.compute_dtype)
+    if shape.kind == "decode":
+        return {"tokens": _sds((b, 1), jnp.int32)}
+    out: dict = {}
+    if cfg.family == "encdec":
+        out["frames"] = _sds((b, cfg.enc_len, cfg.d_model), cdt)
+        out["tokens"] = _sds((b, s), jnp.int32)
+    elif cfg.family == "vlm":
+        text = max(s - cfg.n_patches, 16)
+        out["tokens"] = _sds((b, text), jnp.int32)
+        out["patches"] = _sds((b, cfg.n_patches, 1024), cdt)
+    else:
+        out["tokens"] = _sds((b, s), jnp.int32)
+    if shape.kind == "train":
+        out["labels"] = _sds(out["tokens"].shape, jnp.int32)
+    return out
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeSpec):
+    model = Model(cfg)
+    cdt = dtype_of(cfg.compute_dtype)
+    return jax.eval_shape(
+        lambda: model.init_decode_cache(shape.global_batch, shape.seq_len,
+                                        dtype=cdt))

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level constant) so importing never touches jax
+device state.  Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model); "pod" is an
+extra data-parallel axis whose collectives ride the inter-pod DCN.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1x1 mesh over the real local device (smoke tests / examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh) -> str:
+    return "model"

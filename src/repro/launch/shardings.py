@@ -1,0 +1,288 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs for the 2-D
+(data, model) mesh (+ optional "pod" data-parallel axis).
+
+Strategy (baseline; §Perf iterates on it):
+  * tensor/expert parallel over "model": attention heads, ffn hidden dim,
+    expert dim, vocab;
+  * data parallel over ("pod","data"): the batch dim of activations;
+  * optimizer moments optionally ZeRO-1-sharded over "data" on top of the
+    param spec (``zero1=True``);
+  * decode caches: batch over data when divisible, else the KV sequence dim
+    (context-parallel decode for the long_500k single-request shape).
+
+Every rule falls back to replication when a dim is not divisible by the
+axis size, so any (arch x shape x mesh) combination lowers.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ArchConfig
+from .mesh import batch_axes
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def _spec_with(mesh: Mesh, shape: tuple[int, ...], axis: str,
+               dims_priority: list[int]) -> P:
+    """Shard the first divisible dim from ``dims_priority`` over ``axis``."""
+    size = _axis_size(mesh, axis)
+    spec: list[Any] = [None] * len(shape)
+    for d in dims_priority:
+        if d < len(shape) and shape[d] % size == 0 and shape[d] >= size:
+            spec[d] = axis
+            break
+    return P(*spec)
+
+
+def _name_of(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+# dims to try sharding over "model", by parameter name suffix.  Leading
+# stacked-layer dims are skipped by inspecting tensor rank relative to the
+# rule's "base rank".
+_MODEL_RULES: list[tuple[str, int, list[int]]] = [
+    # (name suffix, base rank, dims priority relative to base shape)
+    ("embed", 2, [0]),            # (V, D): shard vocab
+    ("lm_head", 2, [1]),          # (D, V)
+    ("enc_pos", 2, []),
+    ("projector", 2, [1]),
+    # head-dim TP only when heads divide the axis; otherwise REPLICATE
+    # attention weights (batch-parallel attention, TP on FFN only).  Any
+    # contracting-dim fallback makes GSPMD all-reduce the quadratic score
+    # tensor (observed: a 206 GB AR on phi4 prefill_32k).
+    ("wq", 3, [1]),               # (D, H, hd)
+    ("wk", 3, [1]),               # (D, K, hd)
+    ("wv", 3, [1]),
+    ("wo", 3, [0]),               # (H, hd, D)
+    ("w_in", 2, [1]),             # (D, F) or (E, D, F) via moe prefix
+    ("w_gate", 2, [1]),
+    ("w_out", 2, [0]),            # (F, D)
+    ("router", 2, []),            # (D, E): replicated (shard_map MoE needs full router per rank)
+    ("in_proj", 2, [1]),          # (D, K)
+    ("out_proj", 2, [0]),         # (di, D)
+    ("conv_w", 2, [1]),           # (k, C)
+    ("conv_b", 1, [0]),
+    ("norm", 1, []),
+]
+
+_MOE_LEAVES = {"w_in", "w_gate", "w_out"}
+
+
+def param_spec(path_name: str, shape: tuple[int, ...], mesh: Mesh) -> P:
+    leaf = path_name.rsplit("/", 1)[-1]
+    is_moe = "moe" in path_name and leaf in _MOE_LEAVES
+    if is_moe:
+        # (E, D, F) / (E, F, D) possibly with stacked-layer prefix: expert
+        # parallelism over "model"
+        base_rank = 3
+        lead = len(shape) - base_rank
+        spec: list[Any] = [None] * len(shape)
+        if shape[lead] % mesh.shape["model"] == 0:
+            spec[lead] = "model"
+            return P(*spec)
+        # fewer experts than the axis: fall back to hidden-dim sharding
+        hidden_dim = lead + (2 if leaf in ("w_in", "w_gate") else 1)
+        if shape[hidden_dim] % mesh.shape["model"] == 0:
+            spec[hidden_dim] = "model"
+        return P(*spec)
+    for suffix, base_rank, dims in _MODEL_RULES:
+        if leaf == suffix:
+            lead = len(shape) - base_rank
+            if lead < 0:
+                return P()
+            return _spec_with(mesh, shape, "model",
+                              [lead + d for d in dims])
+    return P()   # scales, biases, scalars: replicate
+
+
+def param_shardings(params_shape, mesh: Mesh, mode: str = "tp"):
+    """Tree of NamedShardings matching a (ShapeDtypeStruct) param tree."""
+    if mode == "fsdp":
+        return fsdp_param_shardings(params_shape, mesh)
+    def one(path, leaf):
+        spec = param_spec(_name_of(path), leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def fsdp_param_shardings(params_shape, mesh: Mesh):
+    """ZeRO-3: every parameter fully sharded over the whole mesh (largest
+    divisible dim); XLA all-gathers weights per layer inside the scan and
+    reduce-scatters gradients.  Beats TP on collective bytes whenever
+    local tokens >> d_ff (see EXPERIMENTS §Perf)."""
+    allax = tuple(mesh.axis_names)
+    n = 1
+    for a in allax:
+        n *= mesh.shape[a]
+
+    def one(path, leaf):
+        name = _name_of(path)
+        lf = name.rsplit("/", 1)[-1]
+        if "moe" in name and lf in _MOE_LEAVES:
+            # expert weights stay EP-sharded over "model" (the a2a dispatch
+            # assumes rank-local experts); remaining dims over data axes
+            base_rank = 3
+            lead = leaf.ndim - base_rank
+            spec: list = [None] * leaf.ndim
+            if leaf.shape[lead] % mesh.shape["model"] == 0:
+                spec[lead] = "model"
+            rest = tuple(a for a in allax if a != "model")
+            nrest = _axis_size(mesh, rest)
+            for dd in sorted(range(lead + 1, leaf.ndim),
+                             key=lambda i: -leaf.shape[i]):
+                if leaf.shape[dd] % nrest == 0 and leaf.shape[dd] >= nrest:
+                    spec[dd] = rest
+                    break
+            return NamedSharding(mesh, P(*spec))
+        dims = sorted(range(leaf.ndim), key=lambda i: -leaf.shape[i])
+        spec = [None] * leaf.ndim
+        for d in dims:
+            if leaf.shape[d] % n == 0 and leaf.shape[d] >= n:
+                spec[d] = allax
+                break
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def zero1_spec(base: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Extend a param spec by sharding the largest unsharded dim over
+    "data" (ZeRO-1 moment sharding)."""
+    size = mesh.shape["data"]
+    spec = list(base) + [None] * (len(shape) - len(base))
+    cand = [(shape[i], i) for i in range(len(shape))
+            if spec[i] is None and shape[i] % size == 0 and shape[i] >= size]
+    if cand:
+        _, i = max(cand)
+        spec[i] = "data"
+    return P(*spec)
+
+
+def opt_shardings(opt_shape, params_shape, mesh: Mesh, zero1: bool = False,
+                  mode: str = "tp"):
+    if mode == "fsdp":
+        psh = fsdp_param_shardings(params_shape, mesh)
+        return {
+            "m": jax.tree.map(lambda s, l: s, psh, opt_shape["m"]),
+            "v": jax.tree.map(lambda s, l: s, psh, opt_shape["v"]),
+            "count": NamedSharding(mesh, P()),
+        }
+    pspecs = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(_name_of(path), leaf.shape, mesh),
+        params_shape)
+
+    def moment(ps, leaf):
+        spec = zero1_spec(ps, leaf.shape, mesh) if zero1 else ps
+        return NamedSharding(mesh, spec)
+
+    return {
+        "m": jax.tree.map(moment, pspecs, opt_shape["m"]),
+        "v": jax.tree.map(moment, pspecs, opt_shape["v"]),
+        "count": NamedSharding(mesh, P()),
+    }
+
+
+# ------------------------------------------------------------------ batches
+def batch_shardings(batch_shape, mesh: Mesh, mode: str = "tp"):
+    baxes = tuple(mesh.axis_names) if mode == "fsdp" else batch_axes(mesh)
+    n = _axis_size(mesh, baxes)
+
+    def one(leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] % n == 0 and leaf.shape[0] >= n:
+            return NamedSharding(mesh, P(baxes, *([None] * (leaf.ndim - 1))))
+        if mode == "fsdp" and leaf.ndim >= 2:
+            # batch smaller than the mesh: shard batch over the longest
+            # divisible prefix of axes and the sequence over the rest
+            # (data+sequence parallelism for prefill)
+            for cut in range(len(baxes) - 1, 0, -1):
+                bpre, brest = baxes[:cut], baxes[cut:]
+                nb = _axis_size(mesh, bpre)
+                ns = _axis_size(mesh, brest)
+                if (leaf.shape[0] % nb == 0 and leaf.shape[0] >= nb
+                        and leaf.shape[1] % ns == 0):
+                    return NamedSharding(
+                        mesh, P(bpre, brest,
+                                *([None] * (leaf.ndim - 2))))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(one, batch_shape)
+
+
+def cache_shardings(cache_shape, cfg: ArchConfig, mesh: Mesh):
+    """Decode-cache shardings.
+
+    Layout reminders (see models.lm.init_decode_cache):
+      k/v   (L,B,T,K,hd)  or hybrid (nb,B,T,K,hd)
+      conv  (L,B,ck-1,C)  or hybrid (nb,pb,B,ck-1,C)
+      ssm   (L,B,H,N,P)   or hybrid (nb,pb,B,H,N,P)
+      pos   (B,)
+    """
+    baxes = batch_axes(mesh)
+    nb = _axis_size(mesh, baxes)
+    nm = mesh.shape["model"]
+
+    def kv(leaf):
+        l, b, t, k, hd = leaf.shape
+        spec: list[Any] = [None] * 5
+        if b % nb == 0 and b >= nb:
+            spec[1] = baxes
+        elif t % nb == 0:
+            spec[2] = baxes          # context-parallel decode (batch=1)
+        if k % nm == 0 and k >= nm:
+            spec[3] = "model"
+        # NOTE: never shard hd here -- a hd-sharded cache back-propagates
+        # into QK^T as a partial-sum contraction and GSPMD all-reduces the
+        # full quadratic score tensor.
+        return NamedSharding(mesh, P(*spec))
+
+    def generic(leaf, batch_dim, model_dims):
+        spec: list[Any] = [None] * leaf.ndim
+        if (leaf.shape[batch_dim] % nb == 0
+                and leaf.shape[batch_dim] >= nb):
+            spec[batch_dim] = baxes
+        for d in model_dims:
+            if leaf.shape[d] % nm == 0 and leaf.shape[d] >= nm:
+                spec[d] = "model"
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    hybrid = cfg.family == "hybrid"
+    out = {}
+    for key, leaf in cache_shape.items():
+        if key in ("k", "v", "xk", "xv"):
+            out[key] = kv(leaf)
+        elif key == "conv":
+            out[key] = generic(leaf, 2 if hybrid else 1,
+                               [leaf.ndim - 1])
+        elif key == "ssm":
+            out[key] = generic(leaf, 2 if hybrid else 1,
+                               [leaf.ndim - 3])
+        elif key == "pos":
+            out[key] = NamedSharding(mesh, P())
+        else:
+            out[key] = NamedSharding(mesh, P())
+    return out
+
+
+def constraint(x, mesh: Mesh, *spec):
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

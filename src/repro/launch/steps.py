@@ -1,0 +1,43 @@
+"""Step functions lowered by the dry-run / run by train.py and serve.py."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models import Model
+from ..optim import AdamW
+
+
+def make_train_step(model: Model, opt: AdamW):
+    def train_step(state, batch):
+        def loss_fn(p):
+            return model.train_loss(p, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"])
+        new_p, new_opt, om = opt.update(grads, state["opt"],
+                                        state["params"])
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["loss"] = loss
+        return {"params": new_p, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch)
+        return jnp.argmax(logits, axis=-1), cache
+
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    """One decode step: token in, greedy token out, cache updated."""
+    def serve_step(params, tokens, cache):
+        logits, cache = model.decode_step(params, tokens, cache)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt[:, None], cache
+
+    return serve_step

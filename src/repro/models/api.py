@@ -1,0 +1,49 @@
+"""Family-dispatching model API.
+
+    model = Model(cfg)
+    params = model.init(key)
+    loss, metrics = model.train_loss(params, batch)
+    logits, cache = model.prefill(params, batch)
+    logits, cache = model.decode_step(params, tokens, cache)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import encdec, lm
+from .config import ArchConfig
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig) -> None:
+        self.cfg = cfg
+        self._mod = encdec if cfg.family == "encdec" else lm
+
+    def init(self, key):
+        return self._mod.init_params(self.cfg, key)
+
+    def train_loss(self, params, batch):
+        return self._mod.train_loss(params, batch, self.cfg)
+
+    def forward_logits(self, params, batch):
+        if self.cfg.family == "encdec":
+            enc_out = encdec.encode(params, batch["frames"], self.cfg)
+            logits, _ = encdec.dec_forward(params, batch["tokens"], enc_out,
+                                           self.cfg)
+            return logits
+        logits, _, _ = lm.forward(params, batch["tokens"], self.cfg,
+                                  patches=batch.get("patches"))
+        return logits
+
+    def prefill(self, params, batch, pad_to=None):
+        return self._mod.prefill(params, batch, self.cfg, pad_to=pad_to)
+
+    def decode_step(self, params, tokens, cache):
+        return self._mod.decode_step(params, tokens, cache, self.cfg)
+
+    def init_decode_cache(self, batch: int, max_len: int,
+                          dtype=jnp.float32):
+        return self._mod.init_decode_cache(self.cfg, batch, max_len, dtype)
+
+    def param_counts(self):
+        return self.cfg.param_counts()

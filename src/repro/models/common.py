@@ -1,0 +1,138 @@
+"""Shared building blocks: norms, RoPE, embeddings, losses, init."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (...,S,hd/2)
+    angles = angles[..., None, :]                        # (...,S,1,hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       z_loss: float = 0.0) -> jax.Array:
+    """Mean CE over all positions; logits (B,S,V), labels (B,S) int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - gold
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return jnp.mean(loss)
+
+
+def uniform_init(key, shape, scale, dtype):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    bound = scale / (fan_in ** 0.5)
+    return jax.random.uniform(key, shape, dtype=jnp.float32,
+                              minval=-bound, maxval=bound).astype(dtype)
+
+
+def normal_init(key, shape, std, dtype):
+    return (std * jax.random.normal(key, shape, dtype=jnp.float32)
+            ).astype(dtype)
+
+
+# "tp" (default): tensor/expert parallel over the "model" axis, batch over
+# data axes.  "fsdp": params fully sharded over the whole mesh, batch over
+# ALL axes, no in-model "model"-axis constraints.
+SHARDING_MODE = ["tp"]
+
+
+def set_sharding_mode(mode: str) -> None:
+    SHARDING_MODE[0] = mode
+
+
+def ambient_mesh():
+    """The mesh installed by ``with mesh:`` at trace time, or None."""
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def _axes_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def maybe_constrain(x, *dims):
+    """Best-effort sharding constraint inside model code.
+
+    ``dims`` labels per tensor dim: "batch", "seq", "model", or None.
+    TP mode: batch -> data axes, model -> "model", seq -> unsharded.
+    FSDP mode: batch -> all mesh axes when divisible, else the longest
+    divisible prefix with "seq" taking the leftover axes (data+sequence
+    parallel prefill); "model" is ignored (no TP).
+    No-op without a mesh (smoke tests / single device).
+    """
+    mesh = ambient_mesh()
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec
+    fsdp = SHARDING_MODE[0] == "fsdp"
+    spec: list = [None] * len(dims)
+    if fsdp:
+        allax = tuple(mesh.axis_names)
+        try:
+            bdim = dims.index("batch")
+        except ValueError:
+            bdim = None
+        sdim = dims.index("seq") if "seq" in dims else None
+        if bdim is not None:
+            if x.shape[bdim] % _axes_size(mesh, allax) == 0:
+                spec[bdim] = allax
+            else:
+                for cut in range(len(allax) - 1, 0, -1):
+                    bpre, brest = allax[:cut], allax[cut:]
+                    if (x.shape[bdim] % _axes_size(mesh, bpre) == 0
+                            and x.shape[bdim] >= _axes_size(mesh, bpre)
+                            and sdim is not None
+                            and x.shape[sdim] % _axes_size(mesh,
+                                                           brest) == 0):
+                        spec[bdim] = bpre
+                        spec[sdim] = brest
+                        break
+    else:
+        baxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        for i, d in enumerate(dims):
+            if d == "batch":
+                n = _axes_size(mesh, baxes)
+                spec[i] = (baxes if x.shape[i] % n == 0 and x.shape[i] >= n
+                           else None)
+            elif d == "model":
+                nm = mesh.shape.get("model", 1)
+                spec[i] = ("model" if x.shape[i] % nm == 0
+                           and x.shape[i] >= nm else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*spec)))

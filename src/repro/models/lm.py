@@ -1,0 +1,368 @@
+"""Decoder-only LM covering the dense / moe / ssm / hybrid / vlm families.
+
+One parameter tree, `lax.scan` over stacked per-layer parameters (keeps HLO
+size and compile time independent of depth), three entry points:
+
+    train_loss(params, batch, cfg)            -> scalar loss, metrics
+    prefill(params, batch, cfg)               -> last-token logits, cache
+    decode_step(params, tokens, cache, cfg)   -> logits, updated cache
+
+Cache layouts (stacked over layers for scan):
+    attention families: {"k": (L,B,T,K,hd), "v": ..., "pos": (B,)}
+    ssm:                {"conv": (L,B,ck-1,C), "ssm": (L,B,H,N,P), "pos": (B,)}
+    hybrid (zamba2):    mamba states (nb,pb,...) + shared-attn KV (nb,B,T,K,hd)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .attention import decode_attention, full_attention, init_attn_params
+from .common import cross_entropy_loss, dtype_of, normal_init, rms_norm
+from .config import ArchConfig
+from .mlp import init_mlp_params, init_moe_params, mlp_forward, moe_forward
+from .ssm import init_mamba_params, mamba_decode, mamba_forward, xbc_raw_tail
+
+
+# --------------------------------------------------------------------- init
+def _init_block(key, cfg: ArchConfig, dtype) -> dict:
+    """One transformer block (attention + ffn/moe variants)."""
+    ks = jax.random.split(key, 6)
+    p: dict = {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "attn": init_attn_params(ks[0], cfg, dtype),
+    }
+    if cfg.n_experts:
+        p["moe"] = init_moe_params(ks[1], cfg, dtype)
+        if cfg.moe_dense_ff:
+            p["dense_mlp"] = init_mlp_params(ks[2], cfg.d_model,
+                                             cfg.moe_dense_ff, cfg.mlp_act,
+                                             dtype)
+        if cfg.shared_expert_ff:
+            p["shared_mlp"] = init_mlp_params(ks[3], cfg.d_model,
+                                              cfg.shared_expert_ff,
+                                              cfg.mlp_act, dtype)
+    else:
+        p["mlp"] = init_mlp_params(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_act,
+                                   dtype)
+    return p
+
+
+def _init_mamba_layer(key, cfg: ArchConfig, dtype) -> dict:
+    p = init_mamba_params(key, cfg, dtype)
+    p["ln"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    dtype = dtype_of(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    params: dict = {
+        "embed": normal_init(keys[0], (cfg.vocab, cfg.d_model), 0.02, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(keys[1], (cfg.d_model, cfg.vocab),
+                                        cfg.d_model ** -0.5, dtype)
+    if cfg.family in ("dense", "moe", "vlm"):
+        lkeys = jax.random.split(keys[2], cfg.n_layers)
+        params["layers"] = jax.vmap(
+            lambda k: _init_block(k, cfg, dtype))(lkeys)
+    elif cfg.family == "ssm":
+        lkeys = jax.random.split(keys[2], cfg.n_layers)
+        params["layers"] = jax.vmap(
+            lambda k: _init_mamba_layer(k, cfg, dtype))(lkeys)
+    elif cfg.family == "hybrid":
+        nb = cfg.n_layers // cfg.attn_every
+        lkeys = jax.random.split(keys[2], cfg.n_layers)
+        lkeys = lkeys.reshape(nb, cfg.attn_every, *lkeys.shape[1:])
+        params["layers"] = jax.vmap(jax.vmap(
+            lambda k: _init_mamba_layer(k, cfg, dtype)))(lkeys)
+        params["shared"] = _init_block(keys[3], cfg, dtype)
+    else:
+        raise ValueError(cfg.family)
+    if cfg.family == "vlm":
+        params["projector"] = normal_init(keys[4], (1024, cfg.d_model),
+                                          1024 ** -0.5, dtype)
+    return params
+
+
+# ----------------------------------------------------------------- helpers
+def _global_flags(cfg: ArchConfig) -> jax.Array:
+    return jnp.array([cfg.is_global_layer(i) for i in range(cfg.n_layers)])
+
+
+def _logits(params, h, cfg: ArchConfig):
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    return jnp.einsum("bsd,dv->bsv", h, head)
+
+
+def _maybe_ckpt(fn, cfg: ArchConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return fn
+
+
+def _block_forward(lp, h, positions, window, cfg: ArchConfig):
+    """One transformer block on a full sequence.  window: traced scalar,
+    0 => global attention."""
+    a, kv = full_attention(lp["attn"], rms_norm(h, lp["ln1"], cfg.norm_eps),
+                           positions, cfg, window=window)
+    h = h + a
+    m = rms_norm(h, lp["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.n_experts:
+        y, aux = moe_forward(lp["moe"], m, cfg)
+        if cfg.moe_dense_ff:
+            y = y + mlp_forward(lp["dense_mlp"], m, cfg.mlp_act)
+        if cfg.shared_expert_ff:
+            y = y + mlp_forward(lp["shared_mlp"], m, cfg.mlp_act)
+    else:
+        y = mlp_forward(lp["mlp"], m, cfg.mlp_act)
+    return h + y, aux, kv
+
+
+def _embed(params, tokens, cfg: ArchConfig, patches=None):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.family == "vlm":
+        if patches is None:
+            raise ValueError("vlm needs patch embeddings")
+        pe = jnp.einsum("bpv,vd->bpd", patches.astype(h.dtype),
+                        params["projector"])
+        h = jnp.concatenate([pe, h], axis=1)
+    return h.astype(dtype_of(cfg.compute_dtype))
+
+
+# ------------------------------------------------------------ full forward
+def forward(params, tokens, cfg: ArchConfig, patches=None,
+            collect_cache: bool = False, last_only: bool = False):
+    """Full-sequence forward.  Returns (logits, aux_loss, cache|None).
+
+    ``last_only``: compute logits for the final position only (prefill) --
+    avoids materializing (B,S,V) and the vocab-TP collective over it."""
+    h = _embed(params, tokens, cfg, patches)
+    s = h.shape[1]
+    positions = jnp.arange(s)[None, :]
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        flags = _global_flags(cfg)
+
+        def body(carry, xs):
+            hh, aux = carry
+            lp, is_glob = xs
+            window = jnp.where(is_glob, 0, cfg.sliding_window)
+            hh, a, kv = _block_forward(lp, hh, positions, window, cfg)
+            return (hh, aux + a), kv if collect_cache else None
+
+        body = _maybe_ckpt(body, cfg)
+        (h, aux), kvs = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                                     (params["layers"], flags))
+        cache = None
+        if collect_cache:
+            cache = {"k": kvs[0], "v": kvs[1]}
+        if last_only:
+            h = h[:, -1:, :]
+        return _logits(params, h, cfg), aux, cache
+
+    if cfg.family == "ssm":
+        def body(carry, lp):
+            hh = carry
+            y, st = mamba_forward(lp, rms_norm(hh, lp["ln"], cfg.norm_eps),
+                                  cfg, return_state=collect_cache)
+            return hh + y, st
+
+        body = _maybe_ckpt(body, cfg)
+        h, states = jax.lax.scan(body, h, params["layers"])
+        cache = None
+        if collect_cache:
+            cache = {"conv": states[0], "ssm": states[1]}
+        if last_only:
+            h = h[:, -1:, :]
+        return _logits(params, h, cfg), jnp.zeros((), jnp.float32), cache
+
+    if cfg.family == "hybrid":
+        shared = params["shared"]
+
+        def block(carry, xs):
+            hh = carry
+            blk = xs
+
+            def inner(c, lp):
+                y, st = mamba_forward(
+                    lp, rms_norm(c, lp["ln"], cfg.norm_eps), cfg,
+                    return_state=collect_cache)
+                return c + y, st
+
+            hh, sts = jax.lax.scan(inner, hh, blk)
+            hh, _, kv = _block_forward(shared, hh, positions,
+                                       jnp.zeros((), jnp.int32), cfg)
+            return hh, ((sts, kv) if collect_cache else None)
+
+        block = _maybe_ckpt(block, cfg)
+        h, collected = jax.lax.scan(block, h, params["layers"])
+        cache = None
+        if collect_cache:
+            sts, kv = collected
+            cache = {"conv": sts[0], "ssm": sts[1],
+                     "k": kv[0], "v": kv[1]}
+        if last_only:
+            h = h[:, -1:, :]
+        return _logits(params, h, cfg), jnp.zeros((), jnp.float32), cache
+
+    raise ValueError(cfg.family)
+
+
+# ------------------------------------------------------------------- train
+def train_loss(params, batch, cfg: ArchConfig):
+    logits, aux, _ = forward(params, batch["tokens"], cfg,
+                             patches=batch.get("patches"))
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        logits = logits[:, -labels.shape[1]:, :]   # loss on text positions
+    loss = cross_entropy_loss(logits, labels)
+    total = loss + 0.01 * aux
+    return total, {"ce": loss, "aux": aux}
+
+
+# ----------------------------------------------------------------- serving
+def prefill(params, batch, cfg: ArchConfig, pad_to: int | None = None):
+    """Process the prompt; return (last_logits, cache).
+
+    ``pad_to`` reserves decode slots in the attention KV cache."""
+    tokens = batch["tokens"]
+    logits, _, cache = forward(params, tokens, cfg,
+                               patches=batch.get("patches"),
+                               collect_cache=True, last_only=True)
+    b = tokens.shape[0]
+    seqlen = tokens.shape[1] + (cfg.n_patches if cfg.family == "vlm" else 0)
+    pos = jnp.full((b,), seqlen, jnp.int32)
+    if cache is not None and "k" in cache and pad_to and pad_to > seqlen:
+        pad = pad_to - cache["k"].shape[2 if cfg.family == "hybrid" else 2]
+        def _pad(a):
+            cfgp = [(0, 0)] * a.ndim
+            cfgp[2] = (0, pad)
+            return jnp.pad(a, cfgp)
+        cache = dict(cache)
+        cache["k"] = _pad(cache["k"])
+        cache["v"] = _pad(cache["v"])
+    if cache is not None:
+        cache["pos"] = pos
+    return logits[:, -1, :], cache
+
+
+def decode_step(params, tokens, cache, cfg: ArchConfig):
+    """One decode step.  tokens (B,1) int32.  Returns (logits, new cache)."""
+    h = jnp.take(params["embed"], tokens[:, :1], axis=0).astype(
+        dtype_of(cfg.compute_dtype))
+    pos = cache["pos"]
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        flags = _global_flags(cfg)
+
+        def body(carry, xs):
+            hh = carry
+            lp, ck, cv, is_glob = xs
+            window = jnp.where(is_glob, 0, cfg.sliding_window)
+            a, (nk, nv) = decode_attention(
+                lp["attn"], rms_norm(hh, lp["ln1"], cfg.norm_eps),
+                ck, cv, pos, cfg, window=window)
+            hh = hh + a
+            m = rms_norm(hh, lp["ln2"], cfg.norm_eps)
+            if cfg.n_experts:
+                y, _ = moe_forward(lp["moe"], m, cfg)
+                if cfg.moe_dense_ff:
+                    y = y + mlp_forward(lp["dense_mlp"], m, cfg.mlp_act)
+                if cfg.shared_expert_ff:
+                    y = y + mlp_forward(lp["shared_mlp"], m, cfg.mlp_act)
+            else:
+                y = mlp_forward(lp["mlp"], m, cfg.mlp_act)
+            return hh + y, (nk, nv)
+
+        h, (nks, nvs) = jax.lax.scan(
+            body, h, (params["layers"], cache["k"], cache["v"], flags))
+        new_cache = {"k": nks, "v": nvs, "pos": pos + 1}
+
+    elif cfg.family == "ssm":
+        def body(carry, xs):
+            hh = carry
+            lp, cst, sst = xs
+            y, (ncst, nsst) = mamba_decode(
+                lp, rms_norm(hh, lp["ln"], cfg.norm_eps), cst, sst, cfg)
+            return hh + y, (ncst, nsst)
+
+        h, (ncs, nss) = jax.lax.scan(
+            body, h, (params["layers"], cache["conv"], cache["ssm"]))
+        new_cache = {"conv": ncs, "ssm": nss, "pos": pos + 1}
+
+    elif cfg.family == "hybrid":
+        shared = params["shared"]
+
+        def block(carry, xs):
+            hh = carry
+            blk, cst, sst, ck, cv = xs
+
+            def inner(c, lxs):
+                lp, c1, s1 = lxs
+                y, (nc1, ns1) = mamba_decode(
+                    lp, rms_norm(c, lp["ln"], cfg.norm_eps), c1, s1, cfg)
+                return c + y, (nc1, ns1)
+
+            hh, (ncst, nsst) = jax.lax.scan(inner, hh, (blk, cst, sst))
+            a, (nk, nv) = decode_attention(
+                shared["attn"], rms_norm(hh, shared["ln1"], cfg.norm_eps),
+                ck, cv, pos, cfg, window=0)
+            hh = hh + a
+            m = rms_norm(hh, shared["ln2"], cfg.norm_eps)
+            hh = hh + mlp_forward(shared["mlp"], m, cfg.mlp_act)
+            return hh, (ncst, nsst, nk, nv)
+
+        h, (ncs, nss, nks, nvs) = jax.lax.scan(
+            block, h, (params["layers"], cache["conv"], cache["ssm"],
+                       cache["k"], cache["v"]))
+        new_cache = {"conv": ncs, "ssm": nss, "k": nks, "v": nvs,
+                     "pos": pos + 1}
+    else:
+        raise ValueError(cfg.family)
+
+    logits = _logits(params, h, cfg)[:, 0, :]
+    return logits, new_cache
+
+
+def init_decode_cache(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.float32) -> dict:
+    """Fresh (zero) decode cache, e.g. for dry-run serve_step lowering."""
+    l, k, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    pos = jnp.zeros((batch,), jnp.int32)
+    if cfg.family in ("dense", "moe", "vlm"):
+        shape = (l, batch, max_len, k, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+                "pos": pos}
+    if cfg.family == "ssm":
+        c = cfg.d_inner + 2 * cfg.ssm_state
+        return {
+            "conv": jnp.zeros((l, batch, cfg.ssm_conv - 1, c), dtype),
+            "ssm": jnp.zeros((l, batch, cfg.ssm_heads, cfg.ssm_state,
+                              cfg.ssm_head_dim), dtype),
+            "pos": pos,
+        }
+    if cfg.family == "hybrid":
+        nb = cfg.n_layers // cfg.attn_every
+        pb = cfg.attn_every
+        c = cfg.d_inner + 2 * cfg.ssm_state
+        return {
+            "conv": jnp.zeros((nb, pb, batch, cfg.ssm_conv - 1, c), dtype),
+            "ssm": jnp.zeros((nb, pb, batch, cfg.ssm_heads, cfg.ssm_state,
+                              cfg.ssm_head_dim), dtype),
+            "k": jnp.zeros((nb, batch, max_len, k, hd), dtype),
+            "v": jnp.zeros((nb, batch, max_len, k, hd), dtype),
+            "pos": pos,
+        }
+    raise ValueError(cfg.family)

@@ -1,0 +1,187 @@
+"""Mamba2 (state-space duality) block: chunked SSD for train/prefill, O(1)
+state update for decode.
+
+The chunked algorithm (Dao & Gu 2024) splits the sequence into chunks of
+length L: inside a chunk the SSD form is an attention-like quadratic matmul
+(MXU-friendly -- this is what the Pallas kernel tiles); across chunks only
+the (H, N, P) states flow through a short `lax.scan`.
+
+ref oracle for tests: ``repro.kernels.ssd.ref.ssd_reference`` (pure stepwise
+recurrence).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import normal_init, rms_norm
+from .config import ArchConfig
+
+NEG_INF = -2.0 ** 30
+
+
+def init_mamba_params(key, cfg: ArchConfig, dtype) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    kconv = cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    proj_out = 2 * di + 2 * n + h
+    return {
+        "in_proj": normal_init(ks[0], (d, proj_out), d ** -0.5, dtype),
+        "conv_w": normal_init(ks[1], (kconv, di + 2 * n), 0.3, dtype),
+        "conv_b": jnp.zeros((di + 2 * n,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": normal_init(ks[2], (di, d), di ** -0.5, dtype),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ArchConfig):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv along seq.  xbc (B,S,C), w (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(xh, dt, a_log, bmat, cmat, chunk: int,
+                h_init=None, kernel_mode: str = "ref"):
+    """Chunked SSD.
+
+    xh (B,S,H,P), dt (B,S,H) post-softplus, a_log (H,) with A = -exp(a_log),
+    bmat/cmat (B,S,N).  Returns (y (B,S,H,P), h_final (B,H,N,P)).
+    """
+    bsz, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    l = min(chunk, s)
+    orig_s = s
+    if s % l:
+        # pad the tail: dt=0 steps have decay exp(0)=1 and zero increment,
+        # so they change neither y[:orig_s] nor the final state
+        pad = l - s % l
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // l
+    a = -jnp.exp(a_log)                                   # (H,)
+    dtf = dt.astype(jnp.float32)
+    da = dtf * a                                           # (B,S,H) <= 0
+    xc = xh.reshape(bsz, nc, l, h, p)
+    dac = da.reshape(bsz, nc, l, h)
+    dtc = dtf.reshape(bsz, nc, l, h)
+    bc = bmat.reshape(bsz, nc, l, n).astype(jnp.float32)
+    cc = cmat.reshape(bsz, nc, l, n).astype(jnp.float32)
+    cum = jnp.cumsum(dac, axis=2)                          # (B,nc,L,H)
+
+    if kernel_mode in ("pallas", "interpret"):
+        from ..kernels.ssd.ops import ssd_intra_chunk
+        y_intra, states = ssd_intra_chunk(
+            xc, dtc, cum, bc, cc, interpret=kernel_mode == "interpret")
+    else:
+        seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,L,L,H)
+        causal = (jnp.arange(l)[:, None] >= jnp.arange(l)[None, :])
+        decay = jnp.exp(jnp.where(causal[None, None, :, :, None], seg,
+                                  NEG_INF))
+        cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)           # (B,nc,L,L)
+        m = cb[..., None] * decay * dtc[:, :, None, :, :]    # (B,nc,L,L,H)
+        y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m,
+                             xc.astype(jnp.float32))
+        last = cum[:, :, -1:, :]                             # (B,nc,1,H)
+        w_state = jnp.exp(last - cum) * dtc                  # (B,nc,L,H)
+        states = jnp.einsum("bclh,bcln,bclhp->bchnp", w_state, bc,
+                            xc.astype(jnp.float32))          # (B,nc,H,N,P)
+
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (B,nc,H)
+
+    def step(hprev, inp):
+        dcy, s_c = inp                                       # (B,H),(B,H,N,P)
+        hnew = hprev * dcy[..., None, None] + s_c
+        return hnew, hprev
+
+    h0 = (jnp.zeros((bsz, h, n, p), jnp.float32)
+          if h_init is None else h_init.astype(jnp.float32))
+    h_final, h_prevs = jax.lax.scan(
+        step, h0, (chunk_decay.swapaxes(0, 1),
+                   states.swapaxes(0, 1)))
+    h_prevs = h_prevs.swapaxes(0, 1)                         # (B,nc,H,N,P)
+    y_inter = jnp.einsum("bcin,bchnp->bcihp", cc, h_prevs) \
+        * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)[:, :orig_s]
+    return y.astype(xh.dtype), h_final
+
+
+def mamba_forward(params, x, cfg: ArchConfig,
+                  return_state: bool = False):
+    """Full-sequence Mamba2 block.  x (B,S,D) -> (y, (conv_state, ssm_state))."""
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    p = cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, params["in_proj"])
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs = xbc[..., :di]
+    bmat = xbc[..., di:di + n]
+    cmat = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    xh = xs.reshape(*xs.shape[:2], h, p)
+    y, h_final = ssd_chunked(xh, dt, params["A_log"], bmat, cmat,
+                             cfg.ssm_chunk, kernel_mode=cfg.kernel_mode)
+    y = y + (params["D"][:, None] * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(*y.shape[:2], di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+    if not return_state:
+        return out, None
+    conv_state = xbc_raw_tail(x, params, cfg)
+    return out, (conv_state, h_final.astype(x.dtype))
+
+
+def xbc_raw_tail(x, params, cfg: ArchConfig):
+    """Last (conv_k - 1) pre-activation conv inputs, for decode cache."""
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x[:, -(cfg.ssm_conv - 1):, :],
+                        params["in_proj"])
+    _, xbc, _ = _split_proj(zxbcdt, cfg)
+    return xbc
+
+
+def mamba_decode(params, x1, conv_state, ssm_state, cfg: ArchConfig):
+    """Single-token step.
+
+    x1 (B,1,D); conv_state (B,K-1,di+2N); ssm_state (B,H,N,P).
+    Returns (y (B,1,D), (conv_state', ssm_state'))."""
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    p = cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x1, params["in_proj"])
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    window = jnp.concatenate([conv_state, xbc], axis=1)     # (B,K,di+2N)
+    conv = jnp.einsum("bkc,kc->bc", window, params["conv_w"])
+    conv = jax.nn.silu(conv + params["conv_b"])[:, None, :]  # (B,1,.)
+    new_conv_state = window[:, 1:, :]
+    xs = conv[..., :di]
+    bmat = conv[..., di:di + n].astype(jnp.float32)          # (B,1,N)
+    cmat = conv[..., di + n:].astype(jnp.float32)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32)
+                          + params["dt_bias"])[:, 0, :]      # (B,H)
+    a = -jnp.exp(params["A_log"])                            # (H,)
+    da = jnp.exp(dtv * a)                                    # (B,H)
+    xh = xs.reshape(-1, h, p).astype(jnp.float32)            # (B,H,P)
+    inc = jnp.einsum("bh,bn,bhp->bhnp", dtv, bmat[:, 0], xh)
+    hnew = ssm_state.astype(jnp.float32) * da[..., None, None] + inc
+    y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0], hnew)
+    y = y + params["D"][:, None] * xh
+    y = y.reshape(-1, 1, di).astype(x1.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+    return out, (new_conv_state, hnew.astype(ssm_state.dtype))

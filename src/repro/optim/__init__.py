@@ -1,0 +1,3 @@
+from .adamw import AdamW, AdamWConfig, schedule
+
+__all__ = ["AdamW", "AdamWConfig", "schedule"]

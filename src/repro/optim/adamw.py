@@ -1,0 +1,108 @@
+"""AdamW with global-norm clipping, cosine schedule, and configurable
+moment dtype (bf16 moments for the 480B-class MoE, see EXPERIMENTS §Dry-run
+memory accounting)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    moment_dtype: str = "float32"     # float32 | bfloat16
+    # gradient compression for the DP all-reduce: "none" or "bf16_ef"
+    # (cast grads to bf16 before reduction, keep the quantization residual
+    # in an error-feedback buffer so the bias does not accumulate)
+    grad_compression: str = "none"
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+class AdamW:
+    def __init__(self, cfg: AdamWConfig | None = None) -> None:
+        self.cfg = cfg or AdamWConfig()
+
+    def init(self, params) -> dict[str, Any]:
+        mdt = {"float32": jnp.float32,
+               "bfloat16": jnp.bfloat16}[self.cfg.moment_dtype]
+        zeros = lambda p: jnp.zeros(p.shape, mdt)
+        state = {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+        if self.cfg.grad_compression == "bf16_ef":
+            state["ef"] = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+        return state
+
+    def update(self, grads, state, params):
+        cfg = self.cfg
+        new_ef = None
+        if cfg.grad_compression == "bf16_ef":
+            # compress: g_c = bf16(g + ef);  ef' = (g + ef) - g_c
+            def comp(g, e):
+                corrected = g.astype(jnp.float32) + e.astype(jnp.float32)
+                gc = corrected.astype(jnp.bfloat16)
+                return gc, (corrected - gc.astype(jnp.float32)).astype(
+                    jnp.bfloat16)
+            flat_g, tdef = jax.tree.flatten(grads)
+            flat_e = jax.tree.leaves(state["ef"])
+            pairs = [comp(g, e) for g, e in zip(flat_g, flat_e)]
+            grads = jax.tree.unflatten(tdef, [p[0] for p in pairs])
+            new_ef = jax.tree.unflatten(tdef, [p[1] for p in pairs])
+        count = state["count"] + 1
+        lr = schedule(cfg, count)
+        # global-norm clip in fp32
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+
+        b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32) * scale
+            m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+            v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+            mh = m32 / b1c
+            vh = v32 / b2c
+            step_ = mh / (jnp.sqrt(vh) + cfg.eps)
+            if p.ndim >= 2:   # decoupled weight decay on matrices only
+                step_ = step_ + cfg.weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr * step_).astype(p.dtype)
+            return newp, m32.astype(m.dtype), v32.astype(v.dtype)
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+        out = [upd(g, m, v, p) for g, m, v, p in
+               zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+        new_state = {"m": new_m, "v": new_v, "count": count}
+        if new_ef is not None:
+            new_state["ef"] = new_ef
+        return new_p, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,6 @@
+from .hlo_analysis import HloStats, analyze, collective_stats, shape_bytes
+from .model import (HBM_BW, ICI_BW, PEAK_FLOPS, RooflineReport, model_flops)
+
+__all__ = ["HloStats", "analyze", "HBM_BW", "ICI_BW", "PEAK_FLOPS",
+           "RooflineReport", "collective_stats", "model_flops",
+           "shape_bytes"]

@@ -1,0 +1,430 @@
+"""Post-compile HLO analysis: FLOPs, HBM bytes, and collective link bytes,
+with while-loop bodies multiplied by their trip count.
+
+Why not ``compiled.cost_analysis()``: XLA's analysis counts a while body
+ONCE (verified empirically), so a scan-over-layers model under-reports by
+~n_layers x.  This walker parses the optimized (post-SPMD) HLO text -- the
+per-device module -- and:
+
+  * builds a per-computation symbol table (instruction -> result shape) so
+    operand byte sizes resolve,
+  * multiplies while-body costs by ``backend_config known_trip_count``
+    (fallback: the comparison constant in the loop condition),
+  * FLOPs: 2 x numel(result) x prod(contracting dims) per dot
+    (convolutions are counted via their output size x window),
+  * HBM bytes: per top-level instruction, result + operand bytes, skipping
+    free ops (bitcast/get-tuple-element/tuple/parameter) and control-flow
+    shells (while/conditional) whose bodies are walked instead.  Fusion
+    internals are NOT walked for bytes (a fusion reads its params and
+    writes its result once) but ARE walked for FLOPs,
+  * collectives: ring-cost link bytes per device
+        all-reduce 2(n-1)/n x size; all-gather/all-to-all (n-1)/n x size;
+        reduce-scatter (n-1) x result-shard size; collective-permute size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "token": 0, "u1": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"((?:\([^)]*\))|(?:[\w\[\]\,\{\}]+))\s+([\w\-]+)\(([^)]*)\)")
+_PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*((?:\([^)]*\))|(?:[\w\[\]\,\{\}]+))")
+_TRIP_RE = re.compile(r'known_trip_count[="\{\:\s]+n["\:\s]+"?(\d+)')
+
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-reduce-start", "all-gather-start",
+                "collective-permute-start"}
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "all-reduce-done", "all-gather-done", "collective-permute-done",
+             "iota"}
+_CONTROL_OPS = {"while", "conditional", "call"}
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+def _numel(shape_str: str) -> int:
+    dims = _shape_dims(shape_str)
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    shape: str
+    opcode: str
+    operands: list[str]
+    line: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    instrs: list[_Instr]
+    symbols: dict[str, str]           # name -> result shape string
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    collective_counts: dict[str, int] = dataclasses.field(
+        default_factory=dict)
+    while_trips: list[int] = dataclasses.field(default_factory=list)
+    byte_breakdown: dict[tuple, float] = dataclasses.field(
+        default_factory=dict)
+
+    def add(self, other: "HloStats", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.collective_by_kind.items():
+            self.collective_by_kind[k] = (
+                self.collective_by_kind.get(k, 0.0) + v * mult)
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] = (
+                self.collective_counts.get(k, 0) + int(v * mult))
+        for k, v in other.byte_breakdown.items():
+            self.byte_breakdown[k] = (
+                self.byte_breakdown.get(k, 0.0) + v * mult)
+
+
+def _parse_module(hlo: str) -> tuple[dict[str, _Computation], str | None]:
+    comps: dict[str, _Computation] = {}
+    entry: str | None = None
+    cur: _Computation | None = None
+    for line in hlo.splitlines():
+        if line and not line[0].isspace() and "{" in line and "(" in line:
+            head, _, rest = line.partition("(")
+            is_entry = head.startswith("ENTRY")
+            name = head.replace("ENTRY", "").strip().lstrip("%").split()[0] \
+                if head.replace("ENTRY", "").strip() else ""
+            if not name:
+                cur = None
+                continue
+            cur = _Computation(name, [], {})
+            comps[name] = cur
+            if is_entry:
+                entry = name
+            # parameters from signature
+            sig = rest.split(")")[0]
+            for m in _PARAM_RE.finditer(sig):
+                cur.symbols[m.group(1)] = m.group(2)
+        elif cur is not None and line.strip() == "}":
+            cur = None
+        elif cur is not None:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, shape, opcode, opstr = m.groups()
+            operands = re.findall(r"%([\w\.\-]+)", opstr)
+            instr = _Instr(name, shape, opcode, operands, line)
+            cur.instrs.append(instr)
+            cur.symbols[name] = shape
+    return comps, entry
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return max(1, m.group(1).count(",") + 1)
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return max(1, int(m.group(2)))
+    return default
+
+
+def _collective_link_bytes(instr: _Instr, n_devices: int) -> float:
+    kind = instr.opcode.replace("-start", "")
+    n = _group_size(instr.line, n_devices)
+    size = shape_bytes(instr.shape)
+    frac = (n - 1) / max(n, 1)
+    if kind == "all-reduce":
+        return 2.0 * frac * size
+    if kind == "reduce-scatter":
+        return frac * size * n
+    if kind == "collective-permute":
+        return float(size)
+    return frac * size     # all-gather / all-to-all
+
+
+def _dot_flops(instr: _Instr, symbols: dict[str, str]) -> float:
+    out_elems = _numel(instr.shape)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.line)
+    lhs_shape = symbols.get(instr.operands[0], "") if instr.operands else ""
+    dims = _shape_dims(lhs_shape)
+    contract = 1
+    if m and m.group(1) and dims:
+        for d in m.group(1).split(","):
+            di = int(d)
+            if di < len(dims):
+                contract *= dims[di]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(instr: _Instr, symbols: dict[str, str]) -> float:
+    # rough: 2 x output elems x (kernel spatial x in-ch) -- rare in our nets
+    out_elems = _numel(instr.shape)
+    rhs_shape = symbols.get(instr.operands[1], "") if len(
+        instr.operands) > 1 else ""
+    k = _numel(rhs_shape)
+    dims = _shape_dims(rhs_shape)
+    oc = dims[-1] if dims else 1
+    return 2.0 * out_elems * (k / max(oc, 1))
+
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "tanh", "negate", "compare",
+    "select", "convert", "broadcast", "rsqrt", "sqrt", "power", "and", "or",
+    "not", "xor", "log", "log-plus-one", "logistic", "abs", "sign", "clamp",
+    "floor", "ceil", "round-nearest-afz", "reduce", "map", "reshape",
+    "slice", "pad", "reverse", "concatenate", "iota", "constant",
+    "parameter", "bitcast", "get-tuple-element", "tuple", "cosine", "sine",
+    "erf", "is-finite", "rem", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "reduce-window", "atan2", "expm1", "log1p",
+}
+_NON_STREAM = {"dot", "convolution", "dynamic-update-slice", "gather",
+               "scatter", "sort", "dynamic-slice", "rng", "fft",
+               "triangular-solve", "cholesky", "custom-call"}
+
+
+def _streamable(ins: _Instr, comps: dict[str, _Computation]) -> bool:
+    """Would XLA:TPU fuse this op into an elementwise pipeline?  CPU emits
+    one mini-fusion per op; TPU fuses whole chains, so we approximate TPU
+    HBM traffic by charging single-consumer streamable chains only at the
+    chain boundary."""
+    if ins.opcode in _ELEMENTWISE:
+        return True
+    if ins.opcode == "fusion":
+        m = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+        called = comps.get(m.group(1)) if m else None
+        if called is None:
+            return False
+        return all(sub.opcode in _ELEMENTWISE or sub.opcode == "fusion"
+                   for sub in called.instrs)
+    return False
+
+
+def _trip_count(instr: _Instr, comps: dict[str, _Computation]) -> int:
+    m = _TRIP_RE.search(instr.line)
+    if m:
+        return int(m.group(1))
+    c = re.search(r"condition=%?([\w\.\-]+)", instr.line)
+    if c and c.group(1) in comps:
+        consts = []
+        for sub in comps[c.group(1)].instrs:
+            for mm in re.finditer(r"constant\((\d+)\)", sub.line):
+                consts.append(int(mm.group(1)))
+        if consts:
+            return max(consts)
+    return 1
+
+
+def _flops_only(comp: _Computation, comps, memo, depth=0) -> float:
+    """FLOPs inside fusion subcomputations (dots/convs can hide there)."""
+    if depth > 60:
+        return 0.0
+    if comp.name in memo:
+        return memo[comp.name]
+    total = 0.0
+    memo[comp.name] = 0.0
+    for ins in comp.instrs:
+        if ins.opcode == "dot":
+            total += _dot_flops(ins, comp.symbols)
+        elif ins.opcode == "convolution":
+            total += _conv_flops(ins, comp.symbols)
+        else:
+            m = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+            if m and m.group(1) in comps:
+                total += _flops_only(comps[m.group(1)], comps, memo,
+                                     depth + 1)
+    memo[comp.name] = total
+    return total
+
+
+def analyze(hlo: str, n_devices: int,
+            assume_bf16_activations: bool = False) -> HloStats:
+    """``assume_bf16_activations``: XLA:CPU legalizes bf16 compute to f32
+    (inflating every activation 2x vs the TPU target); when the model's
+    compute dtype is bf16 we charge large f32 tensors at 2 bytes/elem."""
+    comps, entry = _parse_module(hlo)
+
+    def cb(shape_str: str) -> float:
+        b = shape_bytes(shape_str)
+        if assume_bf16_activations and shape_str.lstrip().startswith("f32"):
+            n = _numel(shape_str)
+            if n >= 262_144:          # large activation, not a scalar/state
+                return b * 0.5
+        return float(b)
+    if entry is None:
+        return HloStats()
+    fmemo: dict[str, float] = {}
+    wmemo: dict[str, HloStats] = {}
+
+    def walk(name: str, depth: int = 0) -> HloStats:
+        if name in wmemo:
+            return wmemo[name]
+        stats = HloStats()
+        wmemo[name] = stats
+        if name not in comps or depth > 60:
+            return stats
+        comp = comps[name]
+        # TPU-fusion approximation: a streamable instr with exactly one
+        # streamable consumer is fused away (result never hits HBM)
+        consumers: dict[str, list[_Instr]] = {}
+        for ins in comp.instrs:
+            for o in ins.operands:
+                consumers.setdefault(o, []).append(ins)
+        fused_away: set[str] = set()
+        for ins in comp.instrs:
+            cons = consumers.get(ins.name, [])
+            if len(cons) == 1 and _streamable(ins, comps) and (
+                    _streamable(cons[0], comps)
+                    or cons[0].opcode == "dot"):   # operand fusion into dot
+                fused_away.add(ins.name)
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op in _FREE_OPS:
+                continue
+            if op == "while":
+                trips = _trip_count(ins, comps)
+                stats.while_trips.append(trips)
+                b = re.search(r"body=%?([\w\.\-]+)", ins.line)
+                if b:
+                    stats.add(walk(b.group(1), depth + 1), trips)
+                continue
+            if op == "conditional":
+                for m in re.finditer(
+                        r"(?:true_computation|false_computation|"
+                        r"branch_computations=\{)[=%]*([\w\.\-]+)", ins.line):
+                    stats.add(walk(m.group(1), depth + 1), 1.0)
+                continue
+            if op == "call":
+                m = re.search(r"to_apply=%?([\w\.\-]+)", ins.line)
+                if m:
+                    stats.add(walk(m.group(1), depth + 1), 1.0)
+                continue
+            if op in _COLLECTIVES:
+                kind = op.replace("-start", "")
+                nbytes = _collective_link_bytes(ins, n_devices)
+                if (assume_bf16_activations
+                        and ins.shape.lstrip().startswith("f32")
+                        and _numel(ins.shape) >= 262_144):
+                    nbytes *= 0.5
+                stats.collective_bytes += nbytes
+                stats.collective_by_kind[kind] = (
+                    stats.collective_by_kind.get(kind, 0.0) + nbytes)
+                stats.collective_counts[kind] = (
+                    stats.collective_counts.get(kind, 0) + 1)
+                stats.hbm_bytes += cb(ins.shape)
+                continue
+            # compute / data ops: HBM model = result + operands.
+            # dynamic-(update-)slice are in-place on TPU: only the slice
+            # moves, not the full buffer (else scan residuals count L^2 x).
+            if op == "dynamic-update-slice":
+                upd = (cb(comp.symbols.get(ins.operands[1], ""))
+                       if len(ins.operands) > 1 else 0)
+                stats.hbm_bytes += 2 * upd
+                stats.byte_breakdown[(op, ins.shape[:48])] = (
+                    stats.byte_breakdown.get((op, ins.shape[:48]), 0.0)
+                    + 2 * upd)
+                continue
+            if op == "scatter":
+                # in-place on TPU: traffic = updates (read) + slice write
+                upd = (cb(comp.symbols.get(ins.operands[-1], ""))
+                       if ins.operands else 0)
+                stats.hbm_bytes += 2 * upd
+                stats.byte_breakdown[(op, ins.shape[:48])] = (
+                    stats.byte_breakdown.get((op, ins.shape[:48]), 0.0)
+                    + 2 * upd)
+                continue
+            if op == "dynamic-slice":
+                stats.hbm_bytes += 2 * cb(ins.shape)
+                stats.byte_breakdown[(op, ins.shape[:48])] = (
+                    stats.byte_breakdown.get((op, ins.shape[:48]), 0.0)
+                    + 2 * cb(ins.shape))
+                continue
+            skip_inplace = False
+            if op == "fusion":
+                m = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+                called = comps.get(m.group(1)) if m else None
+                if called and any(
+                        sub.opcode in ("dynamic-update-slice", "scatter")
+                        for sub in called.instrs):
+                    skip_inplace = True   # in-place update of a big buffer
+            # result write, unless this value streams into its consumer
+            nbytes = 0.0 if ins.name in fused_away else cb(ins.shape)
+            skipped_once = False
+            for o in ins.operands:
+                if o in fused_away:
+                    continue              # streamed from producer, no read
+                oshape = comp.symbols.get(o, "")
+                if (skip_inplace and not skipped_once
+                        and oshape == ins.shape):
+                    skipped_once = True   # aliased in-place buffer
+                    nbytes -= cb(ins.shape)  # result aliased too
+                    continue
+                nbytes += cb(oshape)
+            stats.hbm_bytes += max(nbytes, 0)
+            stats.byte_breakdown[(op, ins.shape[:48])] = (
+                stats.byte_breakdown.get((op, ins.shape[:48]), 0.0)
+                + max(nbytes, 0))
+            if op == "dot":
+                stats.flops += _dot_flops(ins, comp.symbols)
+            elif op == "convolution":
+                stats.flops += _conv_flops(ins, comp.symbols)
+            elif op == "fusion":
+                m = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+                if m and m.group(1) in comps:
+                    stats.flops += _flops_only(comps[m.group(1)], comps,
+                                               fmemo)
+        wmemo[name] = stats
+        return stats
+
+    return walk(entry)
+
+
+# Back-compat helper used by tests
+def collective_stats(hlo: str, n_devices: int):
+    st = analyze(hlo, n_devices)
+
+    class _C:
+        bytes_by_kind = st.collective_by_kind
+        count_by_kind = st.collective_counts
+        total_bytes = st.collective_bytes
+    return _C()

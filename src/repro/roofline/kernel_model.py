@@ -1,0 +1,47 @@
+"""Pallas flash-attention substitution estimate.
+
+The XLA reference attention materializes the (B,H,S,T) score/probability
+tensors in HBM; the Pallas kernel (kernels/flash_attention) keeps them in
+VMEM tiles and recomputes them in-kernel for the backward pass, so on real
+TPU those tensors never touch HBM.  The dry-run cannot lower Pallas on the
+CPU backend, so we *estimate* the kernel's effect by removing score-shaped
+entries from the measured HBM byte breakdown:
+
+    score-shaped: >= 2 dims >= min(2048, seq) whose product >= seq^2 / 4
+
+Q/K/V/O traffic stays counted (it flows through the projection dots), so
+the adjusted total is a structural estimate, reported separately from the
+measured baseline (EXPERIMENTS §Perf) and never mixed into headline
+numbers.
+"""
+from __future__ import annotations
+
+import re
+
+from .hlo_analysis import HloStats
+
+_DIMS_RE = re.compile(r"\[([\d,]+)\]")
+
+
+def _score_shaped(shape_str: str, seq_len: int) -> bool:
+    # scores/probs are rank>=4 (B,[K,G|H],Sq,Skv) with two sequence-scale
+    # dims (Sq may be mesh-sharded); 2-3D activations never qualify
+    thresh = max(min(2048, seq_len // 4), 256)
+    for m in _DIMS_RE.finditer(shape_str):
+        dims = [int(d) for d in m.group(1).split(",")]
+        if len(dims) < 4:
+            continue
+        big = sorted((d for d in dims if d >= thresh), reverse=True)
+        if len(big) >= 2 and big[0] * big[1] >= seq_len * seq_len / 32:
+            return True
+    return False
+
+
+def flash_adjusted_bytes(stats: HloStats, seq_len: int) -> tuple[float,
+                                                                 float]:
+    """(adjusted_hbm_bytes, removed_bytes) per device."""
+    removed = 0.0
+    for (op, shape_s), b in stats.byte_breakdown.items():
+        if _score_shaped(shape_s, seq_len):
+            removed += b
+    return stats.hbm_bytes - removed, removed

@@ -1,0 +1,8 @@
+from .checkpoint import CheckpointManager, ReplicaPlacer
+from .trainer import TrainConfig, Trainer, make_accum_train_step
+
+__all__ = ["CheckpointManager", "ReplicaPlacer", "TrainConfig", "Trainer",
+           "make_accum_train_step"]
+from .serving import Completion, Request, ServingEngine  # noqa: E402
+
+__all__ += ["Completion", "Request", "ServingEngine"]

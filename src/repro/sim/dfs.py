@@ -1,0 +1,124 @@
+"""Distributed file system models (paper §II-C, §V-B).
+
+Two backends, matching the paper's evaluation:
+
+* ``NfsModel``  -- one dedicated server node (the paper's 9th node with the
+  NVMe SSD); every DFS byte crosses the server's NIC -> the single-point
+  bottleneck the paper observes.
+* ``CephModel`` -- object store striped over the compute nodes with a
+  replication factor (paper: 2).  Writes push to ``replication`` pseudo-
+  randomly chosen nodes; reads pull from the closest replica (local if
+  possible, else a random replica).
+
+Both expose the *link paths* a read/write of a file needs, so the flow-level
+network model prices them.
+"""
+from __future__ import annotations
+
+import random
+
+from .network import LinkId
+
+
+class DfsModel:
+    name = "dfs"
+
+    def write_paths(self, file_id: int, size: int,
+                    writer: int) -> list[tuple[tuple[LinkId, ...], float]]:
+        raise NotImplementedError
+
+    def read_paths(self, file_id: int, size: int,
+                   reader: int) -> list[tuple[tuple[LinkId, ...], float]]:
+        raise NotImplementedError
+
+    def input_read_paths(self, size: int,
+                         reader: int) -> list[tuple[tuple[LinkId, ...], float]]:
+        """Workflow *input* data (pre-loaded into the DFS)."""
+        raise NotImplementedError
+
+    def stored_bytes_per_node(self) -> dict[int, int]:
+        return {}
+
+
+class NfsModel(DfsModel):
+    name = "nfs"
+
+    def __init__(self, server: int) -> None:
+        self.server = server
+        self._sizes: dict[int, int] = {}
+
+    def write_paths(self, file_id, size, writer):
+        self._sizes[file_id] = size
+        return [((("up", writer), ("down", self.server), ("dw", self.server)),
+                 float(size))]
+
+    def read_paths(self, file_id, size, reader):
+        return [((("dr", self.server), ("up", self.server), ("down", reader)),
+                 float(size))]
+
+    def input_read_paths(self, size, reader):
+        if size <= 0:
+            return []
+        return [((("dr", self.server), ("up", self.server), ("down", reader)),
+                 float(size))]
+
+    def stored_bytes_per_node(self):
+        return {self.server: sum(self._sizes.values())}
+
+
+class CephModel(DfsModel):
+    name = "ceph"
+
+    def __init__(self, n_nodes: int, replication: int = 2,
+                 seed: int = 0) -> None:
+        self.n_nodes = n_nodes
+        self.replication = min(replication, n_nodes)
+        self._rng = random.Random(seed)
+        self._placement: dict[int, tuple[int, ...]] = {}
+
+    def _place(self, file_id: int) -> tuple[int, ...]:
+        if file_id not in self._placement:
+            self._placement[file_id] = tuple(
+                self._rng.sample(range(self.n_nodes), self.replication))
+        return self._placement[file_id]
+
+    def write_paths(self, file_id, size, writer):
+        paths = []
+        for r in self._place(file_id):
+            if r == writer:
+                paths.append(((("dw", r),), float(size)))
+            else:
+                paths.append(((("up", writer), ("down", r), ("dw", r)),
+                              float(size)))
+        return paths
+
+    def read_paths(self, file_id, size, reader):
+        replicas = self._place(file_id)
+        if reader in replicas:
+            return [((("dr", reader),), float(size))]
+        r = replicas[self._rng.randrange(len(replicas))]
+        return [((("dr", r), ("up", r), ("down", reader)), float(size))]
+
+    def input_read_paths(self, size, reader):
+        # workflow inputs are striped across the cluster; on average a
+        # replication/n fraction is local
+        if size <= 0:
+            return []
+        local = size * min(1.0, self.replication / self.n_nodes)
+        remote = size - local
+        paths: list[tuple[tuple[LinkId, ...], float]] = []
+        if local > 0:
+            paths.append(((("dr", reader),), local))
+        if remote > 0:
+            r = self._rng.randrange(self.n_nodes)
+            while r == reader and self.n_nodes > 1:
+                r = self._rng.randrange(self.n_nodes)
+            paths.append(((("dr", r), ("up", r), ("down", reader)), remote))
+        return paths
+
+    def stored_bytes_per_node(self):
+        out: dict[int, int] = {}
+        for fid, replicas in self._placement.items():
+            for r in replicas:
+                out[r] = out.get(r, 0)
+        return out

@@ -1,0 +1,493 @@
+"""Discrete-event cluster simulator.
+
+Reproduces the paper's execution environment (§V-B) in virtual time: 8 nodes
+x (16 cores, 128 GB, SATA SSD 537/402 MB/s), 1 or 2 Gbit network, Ceph
+(rep 2) or NFS (dedicated NVMe server node), and runs a dynamic workflow
+under one of the three strategies (orig / cws / wow).
+
+Beyond the paper: node failure injection + elastic node join, exercising the
+DPS's replica recovery (the paper's §VIII future work).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+
+from ..core import (DFS_LOC, FileSpec, NodeState, StartCop, StartTask,
+                    TaskSpec, abstract_ranks, assign_priorities)
+from ..core.types import CopPlan
+from .dfs import CephModel, DfsModel, NfsModel
+from .metrics import SimResult, gini
+from .network import FlowManager, build_links
+from .strategies import BaseStrategy, WowStrategy, make_strategy
+from .workflow import Workflow
+
+GiB = 1024 ** 3
+EPS = 1e-9
+
+
+@dataclasses.dataclass
+class SimConfig:
+    n_nodes: int = 8
+    cores: float = 16.0
+    mem: int = 128 * GiB
+    disk_read_bw: float = 537e6          # paper's SATA SSD
+    disk_write_bw: float = 402e6
+    net_bw: float = 125e6                # 1 Gbit
+    dfs: str = "ceph"                    # "ceph" | "nfs"
+    nfs_disk_read_bw: float = 3.0e9      # paper's NVMe server
+    nfs_disk_write_bw: float = 2.5e9
+    ceph_replication: int = 2
+    c_node: int = 1
+    c_task: int = 2
+    seed: int = 0
+    gc_replicas: bool = False            # paper kept all replicas
+
+
+@dataclasses.dataclass
+class _TaskRun:
+    task: TaskSpec
+    node: int
+    phase: str                  # read | compute | write
+    pending: set[int]
+    start: float
+    flows: set[int] = dataclasses.field(default_factory=set)
+
+
+@dataclasses.dataclass
+class _CopRun:
+    plan: CopPlan
+    pending: set[int]
+    flows: set[int] = dataclasses.field(default_factory=set)
+
+
+class DeadlockError(RuntimeError):
+    pass
+
+
+class Simulation:
+    def __init__(self, wf: Workflow, cfg: SimConfig,
+                 strategy: str = "wow") -> None:
+        wf.validate()
+        self.wf = wf
+        self.cfg = cfg
+        self.time = 0.0
+        self.nodes: dict[int, NodeState] = {
+            i: NodeState(i, cfg.mem, cfg.cores) for i in range(cfg.n_nodes)
+        }
+        self.strategy: BaseStrategy = make_strategy(
+            strategy, self.nodes, c_node=cfg.c_node, c_task=cfg.c_task,
+            seed=cfg.seed)
+
+        extra: tuple[int, ...] = ()
+        self.nfs_server = cfg.n_nodes
+        if cfg.dfs == "nfs":
+            extra = (self.nfs_server,)
+            self.dfs: DfsModel = NfsModel(self.nfs_server)
+        elif cfg.dfs == "ceph":
+            self.dfs = CephModel(cfg.n_nodes, cfg.ceph_replication, cfg.seed)
+        else:
+            raise ValueError(f"unknown dfs {cfg.dfs!r}")
+        caps = build_links(cfg.n_nodes, cfg.net_bw, cfg.disk_read_bw,
+                           cfg.disk_write_bw, extra_nodes=extra,
+                           extra_net_bw=cfg.net_bw,
+                           extra_disk_read_bw=cfg.nfs_disk_read_bw,
+                           extra_disk_write_bw=cfg.nfs_disk_write_bw)
+        self.fm = FlowManager(caps)
+
+        self.ranks = abstract_ranks(wf.abstract_edges)
+        self.file_sizes = {f.id: f.size for f in wf.files.values()}
+        self.produced: set[int] = set()
+        self.remaining_inputs = {t.id: len(t.inputs)
+                                 for t in wf.tasks.values()}
+        self.task_runs: dict[int, _TaskRun] = {}
+        self.pending: set[int] = set()      # submitted, not yet started
+        self.cop_runs: dict[int, _CopRun] = {}
+        self.timers: list[tuple[float, int, str, object]] = []
+        self._seq = 0
+        self.done_tasks: dict[int, tuple[float, float, int]] = {}  # id->(s,e,node)
+        self.failed_nodes: set[int] = set()
+        # stats
+        self.network_bytes = 0.0
+        self.storage_per_node: dict[int, float] = {}
+        self.cpu_per_node: dict[int, float] = {}
+        self.completed_cops: dict[int, tuple[CopPlan, float]] = {}
+        self.used_cops: set[int] = set()
+        self.tasks_no_cop = 0
+        self._scheduled_failures: list[tuple[float, int]] = []
+        self._scheduled_joins: list[tuple[float, int]] = []
+
+    # ------------------------------------------------------------- plumbing
+    def _push_timer(self, t: float, kind: str, payload: object) -> None:
+        self._seq += 1
+        heapq.heappush(self.timers, (t, self._seq, kind, payload))
+
+    def _add_flow(self, links, nbytes: float, tag) -> int | None:
+        if nbytes <= 0:
+            return None
+        f = self.fm.add(tuple(links), nbytes, tag)
+        if any(l[0] == "up" for l in links):
+            self.network_bytes += nbytes
+        return f.id
+
+    def schedule_failure(self, t: float, node: int) -> None:
+        self._scheduled_failures.append((t, node))
+
+    def schedule_join(self, t: float, node_id: int) -> None:
+        self._scheduled_joins.append((t, node_id))
+
+    # ------------------------------------------------------------- lifecycle
+    def _submit(self, task: TaskSpec) -> None:
+        self.pending.add(task.id)
+        assign_priorities([task], self.ranks, self.file_sizes)
+        self.strategy.submit(task)
+
+    def _submit_initial(self) -> None:
+        for t in self.wf.tasks.values():
+            if self.remaining_inputs[t.id] == 0:
+                self._submit(t)
+
+    def _iterate(self) -> None:
+        for act in self.strategy.iterate():
+            if isinstance(act, StartTask):
+                self._start_task(act.task_id, act.node)
+            elif isinstance(act, StartCop):
+                self._start_cop(act.plan)
+
+    def _start_task(self, tid: int, node: int) -> None:
+        self.pending.discard(tid)
+        task = self.wf.tasks[tid]
+        run = _TaskRun(task, node, "read", set(), self.time)
+        self.task_runs[tid] = run
+        if isinstance(self.strategy, WowStrategy):
+            dps = self.strategy.dps
+            assert dps.is_prepared(task.inputs, node), (
+                f"scheduler started task {tid} on unprepared node {node}")
+            needed = False
+            for cid, (plan, _) in self.completed_cops.items():
+                if plan.target != node:
+                    continue
+                files = {t.file_id for t in plan.transfers}
+                if files & set(task.inputs):
+                    self.used_cops.add(cid)
+                if plan.task_id == tid:
+                    needed = True
+            if not needed:
+                self.tasks_no_cop += 1
+        # read phase flows
+        if self.strategy.local_io:
+            local_bytes = sum(self.file_sizes[f] for f in task.inputs)
+            fid = self._add_flow((("dr", node),), local_bytes,
+                                 ("taskread", tid))
+            if fid is not None:
+                run.pending.add(fid)
+            for links, size in self.dfs.input_read_paths(task.dfs_inputs,
+                                                         node):
+                fid = self._add_flow(links, size, ("taskread", tid))
+                if fid is not None:
+                    run.pending.add(fid)
+        else:
+            for f in task.inputs:
+                for links, size in self.dfs.read_paths(f, self.file_sizes[f],
+                                                       node):
+                    fid = self._add_flow(links, size, ("taskread", tid))
+                    if fid is not None:
+                        run.pending.add(fid)
+            for links, size in self.dfs.input_read_paths(task.dfs_inputs,
+                                                         node):
+                fid = self._add_flow(links, size, ("taskread", tid))
+                if fid is not None:
+                    run.pending.add(fid)
+        run.flows |= run.pending
+        if not run.pending:
+            self._begin_compute(tid)
+
+    def _begin_compute(self, tid: int) -> None:
+        run = self.task_runs[tid]
+        run.phase = "compute"
+        if run.task.compute_time > 0:
+            self._push_timer(self.time + run.task.compute_time,
+                             "compute", tid)
+        else:
+            self._begin_write(tid)
+
+    def _begin_write(self, tid: int) -> None:
+        run = self.task_runs[tid]
+        run.phase = "write"
+        task, node = run.task, run.node
+        out_bytes = sum(self.file_sizes[f] for f in task.outputs)
+        if self.strategy.local_io:
+            total = out_bytes + task.dfs_outputs
+            fid = self._add_flow((("dw", node),), total, ("taskwrite", tid))
+            if fid is not None:
+                run.pending.add(fid)
+            self.storage_per_node[node] = (
+                self.storage_per_node.get(node, 0.0) + total)
+        else:
+            for f in task.outputs:
+                for links, size in self.dfs.write_paths(f, self.file_sizes[f],
+                                                        node):
+                    fid = self._add_flow(links, size, ("taskwrite", tid))
+                    if fid is not None:
+                        run.pending.add(fid)
+                    # storage accounting on the receiving node
+                    dst = links[-1][1]
+                    self.storage_per_node[dst] = (
+                        self.storage_per_node.get(dst, 0.0) + size)
+            if task.dfs_outputs:
+                for links, size in self.dfs.write_paths(-tid - 1,
+                                                        task.dfs_outputs,
+                                                        node):
+                    fid = self._add_flow(links, size, ("taskwrite", tid))
+                    if fid is not None:
+                        run.pending.add(fid)
+                    dst = links[-1][1]
+                    self.storage_per_node[dst] = (
+                        self.storage_per_node.get(dst, 0.0) + size)
+        run.flows |= run.pending
+        if not run.pending:
+            self._finish_task(tid)
+
+    def _finish_task(self, tid: int) -> None:
+        run = self.task_runs.pop(tid)
+        task, node = run.task, run.node
+        self.done_tasks[tid] = (run.start, self.time, node)
+        self.cpu_per_node[node] = (self.cpu_per_node.get(node, 0.0)
+                                   + (self.time - run.start) * task.cores)
+        self.strategy.on_task_finished(tid, node)
+        if isinstance(self.strategy, WowStrategy):
+            for f in task.outputs:
+                self.strategy.dps.register_file(self.wf.files[f], node)
+        for f in task.outputs:
+            self.produced.add(f)
+        for f in task.outputs:
+            for consumer in self.wf.files[f].consumers:
+                self.remaining_inputs[consumer] = sum(
+                    1 for g in self.wf.tasks[consumer].inputs
+                    if g not in self.produced)
+                if (self.remaining_inputs[consumer] == 0
+                        and consumer not in self.pending
+                        and consumer not in self.task_runs
+                        and consumer not in self.done_tasks):
+                    self._submit(self.wf.tasks[consumer])
+        if self.cfg.gc_replicas and isinstance(self.strategy, WowStrategy):
+            for f in task.inputs:
+                if all(c in self.done_tasks
+                       for c in self.wf.files[f].consumers):
+                    self.strategy.dps.delete_replicas(f, keep=0)
+
+    def _start_cop(self, plan: CopPlan) -> None:
+        cop = _CopRun(plan, set())
+        self.cop_runs[plan.id] = cop
+        for tr in plan.transfers:
+            links = (("dr", tr.src), ("up", tr.src), ("down", tr.dst),
+                     ("dw", tr.dst))
+            fid = self._add_flow(links, tr.size, ("cop", plan.id))
+            if fid is not None:
+                cop.pending.add(fid)
+                self.storage_per_node[tr.dst] = (
+                    self.storage_per_node.get(tr.dst, 0.0) + tr.size)
+        cop.flows |= cop.pending
+        if not cop.pending:
+            self._finish_cop(plan.id, ok=True)
+
+    def _finish_cop(self, cop_id: int, ok: bool) -> None:
+        cop = self.cop_runs.pop(cop_id)
+        if ok:
+            self.completed_cops[cop_id] = (cop.plan, self.time)
+        self.strategy.on_cop_finished(cop.plan, ok)
+
+    # ----------------------------------------------------- failure/elastic
+    def _fail_node(self, node: int) -> None:
+        if not isinstance(self.strategy, WowStrategy):
+            raise NotImplementedError("failure injection targets WOW")
+        self.failed_nodes.add(node)
+        sched, dps = self.strategy.sched, self.strategy.dps
+        # abort running tasks on the node
+        for tid, run in list(self.task_runs.items()):
+            if run.node != node:
+                continue
+            for fl in run.flows:
+                self.fm.remove(fl)
+            self.task_runs.pop(tid)
+            sched.on_task_finished(tid, node)  # frees (soon-removed) node
+            self._resubmit(self.wf.tasks[tid])
+        # abort COPs touching the node
+        for cid, cop in list(self.cop_runs.items()):
+            if node in cop.plan.nodes:
+                for fl in cop.flows:
+                    self.fm.remove(fl)
+                self.cop_runs.pop(cid)
+                self.strategy.on_cop_finished(cop.plan, ok=False)
+        # drop replicas; recover lost files by re-running producers
+        lost = self._drop_replicas(node)
+        self.nodes.pop(node, None)
+        for f in lost:
+            self._recover_file(f)
+
+    def _drop_replicas(self, node: int) -> list[int]:
+        dps = self.strategy.dps
+        lost: list[int] = []
+        for f in list(self.wf.files):
+            locs = dps.locations(f)
+            if node in locs:
+                locs.discard(node)
+                if locs:
+                    dps._locations[f] = locs
+                elif dps.has_file(f):
+                    dps._locations.pop(f, None)
+                    lost.append(f)
+        return lost
+
+    def _recover_file(self, file_id: int, force: bool = False) -> None:
+        """Re-execute the producer (transitively) of a lost file.
+
+        ``force``: the file is needed as a *recursive* dependency of another
+        recovery even if all of its direct consumers already finished."""
+        spec = self.wf.files[file_id]
+        if not force and all(c in self.done_tasks for c in spec.consumers):
+            return
+        producer = self.wf.tasks[spec.producer]
+        if producer.id in self.task_runs or producer.id in self.pending:
+            return  # already being re-run / queued
+        # invalidate its outputs; consumers recompute readiness lazily
+        for f in producer.outputs:
+            self.produced.discard(f)
+        for f in producer.outputs:
+            for c in self.wf.files[f].consumers:
+                if c not in self.done_tasks:
+                    self.remaining_inputs[c] = sum(
+                        1 for g in self.wf.tasks[c].inputs
+                        if g not in self.produced)
+        self.done_tasks.pop(producer.id, None)
+        dps = self.strategy.dps
+        missing = [f for f in producer.inputs if not dps.locations(f)]
+        self.remaining_inputs[producer.id] = len(missing)
+        for f in missing:
+            self._recover_file(f, force=True)
+        if not missing:
+            self._submit(producer)
+
+    def _resubmit(self, task: TaskSpec) -> None:
+        self.done_tasks.pop(task.id, None)
+        self._submit(task)
+
+    def _join_node(self, node_id: int) -> None:
+        self.nodes[node_id] = NodeState(node_id, self.cfg.mem, self.cfg.cores)
+        for kind, bw in (("up", self.cfg.net_bw), ("down", self.cfg.net_bw),
+                         ("dr", self.cfg.disk_read_bw),
+                         ("dw", self.cfg.disk_write_bw)):
+            self.fm.capacities[(kind, node_id)] = bw
+
+    # ------------------------------------------------------------------ run
+    def run(self, max_steps: int = 50_000_000) -> SimResult:
+        for t, n in self._scheduled_failures:
+            self._push_timer(t, "fail", n)
+        for t, n in self._scheduled_joins:
+            self._push_timer(t, "join", n)
+        self._submit_initial()
+        self._iterate()
+        steps = 0
+        while True:
+            steps += 1
+            if steps > max_steps:
+                raise RuntimeError("simulation step budget exceeded")
+            self.fm.recompute()
+            dt, _ = self.fm.next_completion()
+            t_flow = self.time + dt if dt != math.inf else math.inf
+            t_timer = self.timers[0][0] if self.timers else math.inf
+            t_next = min(t_flow, t_timer)
+            if t_next == math.inf:
+                break
+            completed = self.fm.advance(max(t_next - self.time, 0.0))
+            self.time = t_next
+            progressed = False
+            for f in completed:
+                self._on_flow_done(f.tag)
+                progressed = True
+            while self.timers and self.timers[0][0] <= self.time + EPS:
+                _, _, kind, payload = heapq.heappop(self.timers)
+                self._on_timer(kind, payload)
+                progressed = True
+            if progressed:
+                self._iterate()
+        if len(self.done_tasks) != len(self.wf.tasks):
+            missing = set(self.wf.tasks) - set(self.done_tasks)
+            raise DeadlockError(
+                f"{len(missing)} tasks never completed, e.g. "
+                f"{sorted(missing)[:5]} (running={list(self.task_runs)[:5]})")
+        return self._result()
+
+    def _on_flow_done(self, tag) -> None:
+        kind, ident = tag
+        if kind == "taskread":
+            run = self.task_runs.get(ident)
+            if run is None:
+                return
+            run.pending = {f for f in run.pending if f in self.fm.flows}
+            if not run.pending:
+                self._begin_compute(ident)
+        elif kind == "taskwrite":
+            run = self.task_runs.get(ident)
+            if run is None:
+                return
+            run.pending = {f for f in run.pending if f in self.fm.flows}
+            if not run.pending:
+                self._finish_task(ident)
+        elif kind == "cop":
+            cop = self.cop_runs.get(ident)
+            if cop is None:
+                return
+            cop.pending = {f for f in cop.pending if f in self.fm.flows}
+            if not cop.pending:
+                self._finish_cop(ident, ok=True)
+
+    def _on_timer(self, kind: str, payload) -> None:
+        if kind == "compute":
+            if payload in self.task_runs:
+                self._begin_write(payload)
+        elif kind == "fail":
+            self._fail_node(payload)
+        elif kind == "join":
+            self._join_node(payload)
+
+    # -------------------------------------------------------------- metrics
+    def _result(self) -> SimResult:
+        starts = [s for s, _, _ in self.done_tasks.values()]
+        ends = [e for _, e, _ in self.done_tasks.values()]
+        makespan = (max(ends) - min(starts)) if ends else 0.0
+        cpu_hours = sum((e - s) * self.wf.tasks[t].cores
+                        for t, (s, e, _) in self.done_tasks.items()) / 3600.0
+        unique = sum(f.size for f in self.wf.files.values())
+        cop_bytes = 0
+        cops_created = 0
+        if isinstance(self.strategy, WowStrategy):
+            cop_bytes = self.strategy.dps.cop_bytes_total
+            cops_created = self.strategy.sched.cops_created
+        node_ids = sorted(set(range(self.cfg.n_nodes)) - self.failed_nodes)
+        return SimResult(
+            workflow=self.wf.name,
+            strategy=self.strategy.name,
+            dfs=self.cfg.dfs,
+            n_nodes=self.cfg.n_nodes,
+            makespan=makespan,
+            cpu_alloc_hours=cpu_hours,
+            tasks_total=len(self.done_tasks),
+            tasks_no_cop=self.tasks_no_cop,
+            cops_created=cops_created,
+            cops_used=len(self.used_cops),
+            cop_bytes=cop_bytes,
+            unique_intermediate_bytes=unique,
+            network_bytes=self.network_bytes,
+            gini_storage=gini([self.storage_per_node.get(n, 0.0)
+                               for n in node_ids]),
+            gini_cpu=gini([self.cpu_per_node.get(n, 0.0)
+                           for n in node_ids]),
+        )
+
+
+def run_workflow(wf: Workflow, strategy: str, cfg: SimConfig | None = None,
+                 **cfg_overrides) -> SimResult:
+    cfg = dataclasses.replace(cfg or SimConfig(), **cfg_overrides)
+    return Simulation(wf, cfg, strategy).run()

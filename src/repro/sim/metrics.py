@@ -1,0 +1,61 @@
+"""Metrics mirroring the paper's evaluation (Table II, Fig. 4/5, Gini)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+def gini(values: list[float]) -> float:
+    """Gini coefficient in [0,1); 0 = perfectly even."""
+    xs = sorted(max(v, 0.0) for v in values)
+    n = len(xs)
+    total = sum(xs)
+    if n == 0 or total <= 0:
+        return 0.0
+    cum = 0.0
+    for i, x in enumerate(xs, start=1):
+        cum += i * x
+    return (2.0 * cum) / (n * total) - (n + 1.0) / n
+
+
+@dataclasses.dataclass
+class SimResult:
+    workflow: str
+    strategy: str
+    dfs: str
+    n_nodes: int
+    makespan: float                     # seconds
+    cpu_alloc_hours: float              # Σ (end-start) * cores / 3600
+    tasks_total: int
+    tasks_no_cop: int                   # "none" column of Table II
+    cops_created: int
+    cops_used: int                      # "used" column of Table II
+    cop_bytes: int                      # Fig. 4 numerator
+    unique_intermediate_bytes: int      # Fig. 4 denominator
+    network_bytes: float                # all bytes that crossed a NIC
+    gini_storage: float
+    gini_cpu: float
+
+    @property
+    def pct_no_cop(self) -> float:
+        return 100.0 * self.tasks_no_cop / max(self.tasks_total, 1)
+
+    @property
+    def pct_cops_used(self) -> float:
+        return 100.0 * self.cops_used / max(self.cops_created, 1)
+
+    @property
+    def data_overhead(self) -> float:
+        """Fig. 4: additional replica bytes / unique intermediate bytes."""
+        return self.cop_bytes / max(self.unique_intermediate_bytes, 1)
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self) | {
+            "pct_no_cop": self.pct_no_cop,
+            "pct_cops_used": self.pct_cops_used,
+            "data_overhead": self.data_overhead,
+        }
+
+
+def efficiency(makespan_1: float, makespan_n: float, n: int) -> float:
+    """Fig. 5: efficiency(n) = makespan(1) / (makespan(n) * n)."""
+    return makespan_1 / (makespan_n * n)

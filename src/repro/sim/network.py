@@ -1,0 +1,161 @@
+"""Flow-level network + storage model with max-min fair bandwidth sharing.
+
+Every shared resource is a *link* with a byte/s capacity:
+
+    ("up", n)   -- node n NIC egress          ("down", n) -- NIC ingress
+    ("dr", n)   -- node n disk read           ("dw", n)   -- disk write
+
+A *flow* is a byte stream traversing a set of links (e.g. a COP transfer
+src->dst uses [dr src, up src, down dst, dw dst]).  Rates follow the classic
+progressive-filling max-min fair allocation: the most contended link fixes
+the fair share of its flows, capacities shrink, repeat.  This captures the
+paper's central network effects -- the NFS single-link saturation, COP
+bandwidth splitting under c_node, and disk-vs-network asymmetry -- without
+packet-level detail (DESIGN.md §7.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Hashable
+
+LinkId = tuple[str, int]
+
+
+@dataclasses.dataclass
+class Flow:
+    id: int
+    links: tuple[LinkId, ...]
+    remaining: float               # bytes
+    tag: Hashable                  # owner handle (task phase / COP)
+    rate: float = 0.0
+
+    def eta(self) -> float:
+        # sub-byte remainders are float dust, not data
+        if self.remaining <= 0.5:
+            return 0.0
+        if self.rate <= 0:
+            return math.inf
+        return self.remaining / self.rate
+
+
+class FlowManager:
+    """Holds active flows and computes max-min fair rates.
+
+    The engine batches adds/removes per event step and calls ``recompute``
+    once, then asks for ``next_completion`` and ``advance``s virtual time.
+    """
+
+    def __init__(self, capacities: dict[LinkId, float]) -> None:
+        self.capacities = capacities
+        self.flows: dict[int, Flow] = {}
+        self._next_id = 0
+        self._dirty = False
+
+    # ------------------------------------------------------------------ API
+    def add(self, links: tuple[LinkId, ...], nbytes: float,
+            tag: Hashable) -> Flow:
+        for l in links:
+            if l not in self.capacities:
+                raise KeyError(f"unknown link {l}")
+        f = Flow(self._next_id, links, max(float(nbytes), 0.0), tag)
+        self._next_id += 1
+        self.flows[f.id] = f
+        self._dirty = True
+        return f
+
+    def remove(self, flow_id: int) -> None:
+        self.flows.pop(flow_id, None)
+        self._dirty = True
+
+    def recompute(self) -> None:
+        """Progressive filling over the links used by active flows."""
+        if not self._dirty:
+            return
+        self._dirty = False
+        flows = list(self.flows.values())
+        if not flows:
+            return
+        remaining_cap: dict[LinkId, float] = {}
+        link_flows: dict[LinkId, set[int]] = {}
+        for f in flows:
+            for l in f.links:
+                link_flows.setdefault(l, set()).add(f.id)
+                remaining_cap.setdefault(l, self.capacities[l])
+        unfrozen = {f.id for f in flows}
+        by_id = {f.id: f for f in flows}
+        while unfrozen:
+            # bottleneck link = min fair share among links with unfrozen flows
+            best_share = math.inf
+            best_link: LinkId | None = None
+            for l, fids in link_flows.items():
+                n = len(fids)
+                if n == 0:
+                    continue
+                share = remaining_cap[l] / n
+                if share < best_share:
+                    best_share = share
+                    best_link = l
+            if best_link is None:
+                break
+            for fid in list(link_flows[best_link]):
+                f = by_id[fid]
+                f.rate = best_share
+                unfrozen.discard(fid)
+                for l in f.links:
+                    link_flows[l].discard(fid)
+                    remaining_cap[l] -= best_share
+                    if remaining_cap[l] < 0:
+                        remaining_cap[l] = 0.0
+            link_flows[best_link].clear()
+
+    def next_completion(self) -> tuple[float, Flow | None]:
+        """(dt, flow) of the earliest finishing flow at current rates."""
+        best_dt, best = math.inf, None
+        for f in self.flows.values():
+            dt = f.eta()
+            if dt < best_dt:
+                best_dt, best = dt, f
+        return best_dt, best
+
+    def advance(self, dt: float) -> list[Flow]:
+        """Progress all flows by ``dt``; returns completed flows (removed)."""
+        done: list[Flow] = []
+        for f in self.flows.values():
+            f.remaining -= f.rate * dt
+            if f.remaining <= 0.5:       # < 1 byte left => complete
+                f.remaining = 0.0
+                done.append(f)
+        for f in done:
+            self.remove(f.id)
+        return done
+
+    @property
+    def active(self) -> int:
+        return len(self.flows)
+
+
+def build_links(
+    n_nodes: int,
+    net_bw: float,
+    disk_read_bw: float,
+    disk_write_bw: float,
+    extra_nodes: tuple[int, ...] = (),
+    extra_net_bw: float | None = None,
+    extra_disk_read_bw: float | None = None,
+    extra_disk_write_bw: float | None = None,
+) -> dict[LinkId, float]:
+    """Standard link table: n compute nodes + optional extra (DFS server)
+    nodes with their own capacities."""
+    caps: dict[LinkId, float] = {}
+    for n in range(n_nodes):
+        caps[("up", n)] = net_bw
+        caps[("down", n)] = net_bw
+        caps[("dr", n)] = disk_read_bw
+        caps[("dw", n)] = disk_write_bw
+    for n in extra_nodes:
+        caps[("up", n)] = extra_net_bw or net_bw
+        caps[("down", n)] = extra_net_bw or net_bw
+        caps[("dr", n)] = extra_disk_read_bw or disk_read_bw
+        caps[("dw", n)] = extra_disk_write_bw or disk_write_bw
+    return caps

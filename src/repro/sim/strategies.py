@@ -1,0 +1,142 @@
+"""The three scheduling strategies of the paper's evaluation (§V-C).
+
+* ``OrigStrategy`` -- Nextflow original: FIFO task order, round-robin node
+  choice, all data exchanged through the DFS.
+* ``CwsStrategy``  -- Common Workflow Scheduler: priority (rank, input size)
+  order, resource-aware node choice, still DFS-based I/O.
+* ``WowStrategy``  -- the paper's contribution: wraps ``core.WowScheduler``
+  (+DPS); intermediate data lives on node-local storage, moved by COPs.
+"""
+from __future__ import annotations
+
+from ..core import (DataPlacementService, NodeState, StartTask, TaskSpec,
+                    WowScheduler)
+from ..core.types import Action
+
+
+class BaseStrategy:
+    name = "base"
+    local_io = False      # True => intermediate I/O on node-local disks
+
+    def __init__(self, nodes: dict[int, NodeState]) -> None:
+        self.nodes = nodes
+        self.running: dict[int, TaskSpec] = {}
+
+    def submit(self, task: TaskSpec) -> None:
+        raise NotImplementedError
+
+    def iterate(self) -> list[Action]:
+        raise NotImplementedError
+
+    def on_task_finished(self, task_id: int, node: int) -> None:
+        t = self.running.pop(task_id)
+        self.nodes[node].free_mem += t.mem
+        self.nodes[node].free_cores += t.cores
+
+    def on_cop_finished(self, plan, ok: bool = True) -> None:  # noqa: ARG002
+        pass
+
+    def _reserve(self, t: TaskSpec, node: int) -> None:
+        self.nodes[node].free_mem -= t.mem
+        self.nodes[node].free_cores -= t.cores
+        self.running[t.id] = t
+
+
+class OrigStrategy(BaseStrategy):
+    """FIFO + RoundRobin, data via DFS."""
+
+    name = "orig"
+
+    def __init__(self, nodes: dict[int, NodeState]) -> None:
+        super().__init__(nodes)
+        self.queue: list[TaskSpec] = []
+        self._rr = 0
+        self._node_ids = sorted(nodes)
+
+    def submit(self, task: TaskSpec) -> None:
+        self.queue.append(task)
+
+    def iterate(self) -> list[Action]:
+        actions: list[Action] = []
+        # strict FIFO: head-of-line blocks when no node fits it
+        while self.queue:
+            t = self.queue[0]
+            placed = False
+            for i in range(len(self._node_ids)):
+                n = self._node_ids[(self._rr + i) % len(self._node_ids)]
+                if self.nodes[n].fits(t):
+                    self._rr = (self._rr + i + 1) % len(self._node_ids)
+                    self.queue.pop(0)
+                    self._reserve(t, n)
+                    actions.append(StartTask(t.id, n))
+                    placed = True
+                    break
+            if not placed:
+                break
+        return actions
+
+
+class CwsStrategy(BaseStrategy):
+    """Priority (rank, input size) order, most-free-cores node; DFS I/O."""
+
+    name = "cws"
+
+    def __init__(self, nodes: dict[int, NodeState]) -> None:
+        super().__init__(nodes)
+        self.queue: dict[int, TaskSpec] = {}
+
+    def submit(self, task: TaskSpec) -> None:
+        self.queue[task.id] = task
+
+    def iterate(self) -> list[Action]:
+        actions: list[Action] = []
+        for t in sorted(self.queue.values(), key=lambda t: (-t.priority, t.id)):
+            cands = [n for n, s in self.nodes.items() if s.fits(t)]
+            if not cands:
+                continue
+            n = max(cands, key=lambda n: (self.nodes[n].free_cores,
+                                          self.nodes[n].free_mem, -n))
+            del self.queue[t.id]
+            self._reserve(t, n)
+            actions.append(StartTask(t.id, n))
+        return actions
+
+
+class WowStrategy(BaseStrategy):
+    """The paper's three-step scheduler + DPS; local intermediate I/O."""
+
+    name = "wow"
+    local_io = True
+
+    def __init__(self, nodes: dict[int, NodeState], c_node: int = 1,
+                 c_task: int = 2, seed: int = 0) -> None:
+        super().__init__(nodes)
+        self.dps = DataPlacementService(seed=seed)
+        self.sched = WowScheduler(nodes, self.dps, c_node=c_node,
+                                  c_task=c_task)
+        self._specs: dict[int, TaskSpec] = {}
+
+    def submit(self, task: TaskSpec) -> None:
+        self._specs[task.id] = task
+        self.sched.submit(task)
+
+    def iterate(self) -> list[Action]:
+        return self.sched.schedule()
+
+    def on_task_finished(self, task_id: int, node: int) -> None:
+        # resource bookkeeping lives inside WowScheduler
+        self.sched.on_task_finished(task_id, node)
+
+    def on_cop_finished(self, plan, ok: bool = True) -> None:
+        self.sched.on_cop_finished(plan, ok)
+
+
+def make_strategy(name: str, nodes: dict[int, NodeState], *, c_node: int = 1,
+                  c_task: int = 2, seed: int = 0) -> BaseStrategy:
+    if name == "orig":
+        return OrigStrategy(nodes)
+    if name == "cws":
+        return CwsStrategy(nodes)
+    if name == "wow":
+        return WowStrategy(nodes, c_node=c_node, c_task=c_task, seed=seed)
+    raise ValueError(f"unknown strategy {name!r}")

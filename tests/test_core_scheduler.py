@@ -1,0 +1,237 @@
+"""Unit + property tests for the paper-faithful core (priorities, ILP, DPS,
+three-step scheduler invariants)."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AssignmentProblem, DataPlacementService, FileSpec,
+                        NodeState, TaskSpec, abstract_ranks,
+                        priority_value, solve, solve_exact, solve_greedy)
+from repro.core.ilp import objective
+
+GiB = 1024 ** 3
+
+
+# ------------------------------------------------------------------ ranks
+def test_abstract_ranks_chain():
+    edges = {"a": {"b"}, "b": {"c"}, "c": set()}
+    r = abstract_ranks(edges)
+    assert r == {"a": 2, "b": 1, "c": 0}
+
+
+def test_abstract_ranks_diamond():
+    edges = {"s": {"a", "b"}, "a": {"t"}, "b": {"x"}, "x": {"t"},
+             "t": set()}
+    r = abstract_ranks(edges)
+    assert r["s"] == 3 and r["t"] == 0 and r["b"] == 2 and r["a"] == 1
+
+
+def test_abstract_ranks_cycle_raises():
+    with pytest.raises(ValueError):
+        abstract_ranks({"a": {"b"}, "b": {"a"}})
+
+
+def test_priority_lexicographic():
+    # rank dominates input size; size breaks ties (paper §III-B)
+    assert priority_value(2, 0) > priority_value(1, 10 ** 15)
+    assert priority_value(1, 2 * 10 ** 9) > priority_value(1, 10 ** 9)
+    assert priority_value(0, 0) > 0
+
+
+# -------------------------------------------------------------------- ILP
+def _mk_problem(rng, n_tasks, n_nodes):
+    nodes = {i: NodeState(i, mem=rng.randint(4, 16) * GiB,
+                          cores=rng.randint(2, 16)) for i in range(n_nodes)}
+    tasks, prepared = [], {}
+    for t in range(n_tasks):
+        task = TaskSpec(id=t, abstract="a",
+                        mem=rng.randint(1, 8) * GiB,
+                        cores=rng.randint(1, 8),
+                        priority=rng.uniform(0.1, 10.0))
+        tasks.append(task)
+        k = rng.randint(0, n_nodes)
+        prepared[t] = rng.sample(range(n_nodes), k)
+    return AssignmentProblem(tasks, prepared, nodes)
+
+
+def _brute_force(problem):
+    p = problem
+    best = [0.0]
+
+    def rec(i, free_mem, free_cores, val):
+        best[0] = max(best[0], val)
+        if i == len(p.tasks):
+            return
+        t = p.tasks[i]
+        rec(i + 1, free_mem, free_cores, val)
+        for n in p.prepared.get(t.id, []):
+            if free_mem[n] >= t.mem and free_cores[n] >= t.cores:
+                free_mem[n] -= t.mem
+                free_cores[n] -= t.cores
+                rec(i + 1, free_mem, free_cores, val + t.priority)
+                free_mem[n] += t.mem
+                free_cores[n] += t.cores
+
+    rec(0, {n: s.free_mem for n, s in p.nodes.items()},
+        {n: s.free_cores for n, s in p.nodes.items()}, 0.0)
+    return best[0]
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(1, 7), st.integers(1, 4))
+def test_ilp_exact_matches_brute_force(seed, n_tasks, n_nodes):
+    rng = random.Random(seed)
+    problem = _mk_problem(rng, n_tasks, n_nodes)
+    exact = solve_exact(problem)
+    assert exact is not None
+    assert abs(objective(problem, exact) - _brute_force(problem)) < 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(1, 14), st.integers(1, 5))
+def test_solvers_feasible(seed, n_tasks, n_nodes):
+    rng = random.Random(seed)
+    problem = _mk_problem(rng, n_tasks, n_nodes)
+    for solver in (solve_greedy, solve):
+        assign = solver(problem)
+        used_mem = {n: 0 for n in problem.nodes}
+        used_cores = {n: 0.0 for n in problem.nodes}
+        by_id = {t.id: t for t in problem.tasks}
+        for tid, n in assign.items():
+            assert n in problem.prepared[tid]      # only prepared nodes
+            used_mem[n] += by_id[tid].mem
+            used_cores[n] += by_id[tid].cores
+        for n, s in problem.nodes.items():
+            assert used_mem[n] <= s.free_mem       # capacity respected
+            assert used_cores[n] <= s.free_cores
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_greedy_not_catastrophic(seed):
+    rng = random.Random(seed)
+    problem = _mk_problem(rng, 6, 3)
+    opt = _brute_force(problem)
+    g = objective(problem, solve_greedy(problem))
+    assert g >= 0.5 * opt - 1e-9   # greedy is a 2-approx in practice
+
+
+# -------------------------------------------------------------------- DPS
+def _dps_with_files(sizes_locs):
+    dps = DataPlacementService(seed=1)
+    for fid, (size, locs) in enumerate(sizes_locs):
+        dps.register_file(FileSpec(id=fid, size=size, producer=0),
+                          locs[0])
+        for n in locs[1:]:
+            dps._locations[fid].add(n)
+    return dps
+
+
+def test_dps_prepared_and_missing():
+    dps = _dps_with_files([(100, [0]), (200, [0, 1]), (300, [2])])
+    assert dps.is_prepared((0, 1), 0)
+    assert not dps.is_prepared((0, 2), 0)
+    assert dps.prepared_nodes((1,), [0, 1, 2]) == [0, 1]
+    assert dps.missing_bytes((0, 1, 2), 1) == 400
+    assert dps.prepared_nodes((), [0, 1]) == [0, 1]   # no inputs: anywhere
+
+
+def test_dps_plan_cop_covers_missing_and_commit():
+    dps = _dps_with_files([(100, [0]), (200, [1]), (300, [2])])
+    plan = dps.plan_cop(7, (0, 1, 2), target=2)
+    assert plan is not None
+    assert {t.file_id for t in plan.transfers} == {0, 1}
+    assert plan.total_bytes == 300
+    for t in plan.transfers:
+        assert t.dst == 2 and t.src != 2
+    dps.commit_cop(plan)
+    assert dps.is_prepared((0, 1, 2), 2)
+    assert dps.cop_bytes_total == 300
+
+
+def test_dps_plan_price_components():
+    # all files on node 0 -> max load == total traffic, price = sum halves
+    dps = _dps_with_files([(100, [0]), (50, [0])])
+    plan = dps.plan_cop(1, (0, 1), target=3)
+    assert plan.price == pytest.approx(0.5 * 150 + 0.5 * 150)
+    # two sources available -> load spread lowers the max-load component
+    dps2 = _dps_with_files([(100, [0]), (100, [1])])
+    plan2 = dps2.plan_cop(1, (0, 1), target=3)
+    assert plan2.price == pytest.approx(0.5 * 200 + 0.5 * 200)
+
+
+def test_dps_source_load_balancing():
+    # 4 equal files all replicated on nodes 0 and 1: greedy must alternate
+    dps = _dps_with_files([(100, [0, 1])] * 4)
+    plan = dps.plan_cop(1, (0, 1, 2, 3), target=5)
+    from collections import Counter
+    srcs = Counter(t.src for t in plan.transfers)
+    assert srcs[0] == 2 and srcs[1] == 2
+
+
+def test_dps_allowed_sources_none_possible():
+    dps = _dps_with_files([(100, [0])])
+    assert dps.plan_cop(1, (0,), target=2, allowed_sources=set()) is None
+
+
+def test_dps_invalidate_and_gc():
+    dps = _dps_with_files([(100, [0, 1, 2])])
+    dps.invalidate(0, only_valid=1)
+    assert dps.locations(0) == {1}
+    freed = dps.delete_replicas(0, keep=0)
+    assert freed == 100
+    assert not dps.locations(0)
+
+
+# -------------------------------------------------- DPS property tests
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(1, 8), st.integers(1, 6),
+       st.integers(1, 6))
+def test_dps_plan_properties(seed, n_files, n_nodes, extra_replicas):
+    """For any replica layout: a planned COP (i) covers exactly the missing
+    files, (ii) never sources from the target, (iii) has price >= half the
+    traffic, and committing it prepares the target."""
+    rng = random.Random(seed)
+    dps = DataPlacementService(seed=seed)
+    fids = []
+    for f in range(n_files):
+        size = rng.randint(1, 10 ** 9)
+        home = rng.randrange(n_nodes)
+        dps.register_file(FileSpec(id=f, size=size, producer=0), home)
+        for _ in range(rng.randint(0, extra_replicas)):
+            dps._locations[f].add(rng.randrange(n_nodes))
+        fids.append(f)
+    target = rng.randrange(n_nodes + 1)
+    missing = {f for f in fids if target not in dps.locations(f)}
+    plan = dps.plan_cop(99, tuple(fids), target)
+    if any(not (dps.locations(f) - {target}) for f in missing):
+        assert plan is None or all(
+            t.src != target for t in plan.transfers)
+        return
+    assert plan is not None
+    assert {t.file_id for t in plan.transfers} == missing
+    assert all(t.src != target and t.dst == target
+               for t in plan.transfers)
+    assert plan.price >= 0.5 * plan.total_bytes - 1e-6
+    dps.commit_cop(plan)
+    assert dps.is_prepared(tuple(fids), target)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(2, 5), st.integers(1, 12))
+def test_dps_greedy_balances_sources(seed, n_nodes, n_files):
+    """When every file is replicated everywhere, greedy source choice keeps
+    the max per-source load within one max-file-size of the mean."""
+    rng = random.Random(seed)
+    dps = DataPlacementService(seed=seed)
+    sizes = [rng.randint(1, 100) for _ in range(n_files)]
+    for f, size in enumerate(sizes):
+        dps.register_file(FileSpec(id=f, size=size, producer=0), 0)
+        dps._locations[f] = set(range(n_nodes))
+    plan = dps.plan_cop(1, tuple(range(n_files)), target=n_nodes)
+    loads = {}
+    for t in plan.transfers:
+        loads[t.src] = loads.get(t.src, 0) + t.size
+    total = sum(sizes)
+    assert max(loads.values()) <= total / n_nodes + max(sizes)

@@ -1,0 +1,150 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), sweeping shapes,
+dtypes, masks and block sizes -- plus hypothesis sweeps on the SSD oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import (attention_reference,
+                                               flash_attention)
+from repro.kernels.moe_gmm.ops import grouped_ffn, grouped_ffn_reference
+from repro.kernels.ssd.ops import (ssd_intra_chunk,
+                                   ssd_intra_chunk_reference, ssd_reference)
+from repro.models.ssm import ssd_chunked
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------- flash attention
+FLASH_CASES = [
+    # B, Sq, Skv, H, K, hd, causal, window, bq, bk
+    (2, 64, 64, 4, 2, 32, True, 0, 32, 32),
+    (1, 100, 100, 4, 4, 64, True, 0, 32, 32),      # ragged padding
+    (2, 32, 128, 4, 1, 16, True, 0, 32, 32),       # MQA, kv prefix
+    (1, 128, 128, 8, 2, 64, True, 24, 32, 32),     # sliding window
+    (1, 96, 96, 2, 2, 32, False, 0, 32, 32),       # non-causal (encoder)
+    (1, 64, 64, 2, 2, 128, True, 0, 64, 16),       # asymmetric blocks
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_matches_reference(case):
+    b, sq, skv, h, k, hd, causal, window, bq, bk = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, sq, h, hd))
+    kk = jax.random.normal(ks[1], (b, skv, k, hd))
+    v = jax.random.normal(ks[2], (b, skv, k, hd))
+    ref = attention_reference(q, kk, v, causal=causal, window=window)
+    out = flash_attention(q, kk, v, causal=causal, window=window,
+                          interpret=True, bq=bq, bk=bk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 64, 4, 32)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 64, 2, 32)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 64, 2, 32)).astype(dtype)
+    out = flash_attention(q, k, v, interpret=True, bq=32, bk=32)
+    ref = attention_reference(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 3e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol,
+        rtol=tol)
+    assert out.dtype == dtype
+
+
+# ------------------------------------------------------------------ SSD
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10 ** 6), st.sampled_from([8, 16, 17, 31]),
+       st.sampled_from([1, 2, 4]))
+def test_ssd_chunked_matches_recurrence(seed, s, h):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    b, p, n = 2, 8, 4
+    xh = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a_log = jnp.log(jnp.linspace(1.0, 8.0, h))
+    bm = jax.random.normal(ks[2], (b, s, n))
+    cm = jax.random.normal(ks[3], (b, s, n))
+    y_ref, h_ref = ssd_reference(xh, dt, a_log, bm, cm)
+    y, hf = ssd_chunked(xh, dt, a_log, bm, cm, chunk=8, kernel_mode="ref")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-3,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(h_ref),
+                               atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("shape", [(2, 2, 16, 4, 8, 16), (1, 4, 32, 2, 16, 8),
+                                   (2, 1, 64, 8, 32, 32),
+                                   (1, 2, 128, 4, 64, 64)])
+def test_ssd_pallas_kernel_matches_oracle(shape):
+    b, nc, l, h, p, n = shape
+    ks = jax.random.split(KEY, 5)
+    xc = jax.random.normal(ks[0], (b, nc, l, h, p))
+    dtc = jax.nn.softplus(jax.random.normal(ks[1], (b, nc, l, h)))
+    cum = jnp.cumsum(-0.1 * dtc, axis=2)
+    bc = jax.random.normal(ks[2], (b, nc, l, n))
+    cc = jax.random.normal(ks[3], (b, nc, l, n))
+    y, s = ssd_intra_chunk(xc, dtc, cum, bc, cc, interpret=True)
+    yr, sr = ssd_intra_chunk_reference(xc, dtc, cum, bc, cc)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-4,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), atol=2e-4,
+                               rtol=1e-3)
+
+
+def test_ssd_pallas_end_to_end_in_model_path():
+    ks = jax.random.split(KEY, 4)
+    b, s, h, p, n = 1, 32, 2, 16, 8
+    xh = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a_log = jnp.log(jnp.linspace(1.0, 4.0, h))
+    bm = jax.random.normal(ks[2], (b, s, n))
+    cm = jax.random.normal(ks[3], (b, s, n))
+    y1, h1 = ssd_chunked(xh, dt, a_log, bm, cm, 8, kernel_mode="ref")
+    y2, h2 = ssd_chunked(xh, dt, a_log, bm, cm, 8, kernel_mode="interpret")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4)
+
+
+# ------------------------------------------------------------- MoE GMM
+@pytest.mark.parametrize("case", [
+    (2, 4, 8, 32, 64, "swiglu", 32),
+    (1, 8, 16, 64, 100, "swiglu", 32),    # F not divisible by block
+    (2, 2, 4, 16, 48, "gelu", 16),
+    (1, 2, 8, 128, 256, "swiglu", 128),
+])
+def test_grouped_ffn_matches_reference(case):
+    b, e, c, d, f, act, bf = case
+    ks = jax.random.split(KEY, 4)
+    buf = 0.5 * jax.random.normal(ks[0], (b, e, c, d))
+    wi = jax.random.normal(ks[1], (e, d, f)) * d ** -0.5
+    wg = jax.random.normal(ks[2], (e, d, f)) * d ** -0.5
+    wo = jax.random.normal(ks[3], (e, f, d)) * f ** -0.5
+    out = grouped_ffn(buf, wi, wg, wo, act=act, bf=bf, interpret=True)
+    ref = grouped_ffn_reference(buf, wi, wg, wo, act=act)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=1e-4)
+
+
+def test_grouped_ffn_bf16():
+    ks = jax.random.split(KEY, 4)
+    b, e, c, d, f = 1, 2, 4, 32, 64
+    buf = (0.5 * jax.random.normal(ks[0], (b, e, c, d))).astype(jnp.bfloat16)
+    wi = (jax.random.normal(ks[1], (e, d, f)) * d ** -0.5).astype(
+        jnp.bfloat16)
+    wg = (jax.random.normal(ks[2], (e, d, f)) * d ** -0.5).astype(
+        jnp.bfloat16)
+    wo = (jax.random.normal(ks[3], (e, f, d)) * f ** -0.5).astype(
+        jnp.bfloat16)
+    out = grouped_ffn(buf, wi, wg, wo, interpret=True, bf=32)
+    ref = grouped_ffn_reference(buf.astype(jnp.float32),
+                                wi.astype(jnp.float32),
+                                wg.astype(jnp.float32),
+                                wo.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref), atol=0.05, rtol=0.05)

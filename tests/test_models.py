@@ -1,0 +1,144 @@
+"""Per-architecture smoke tests (reduced configs) + decode consistency.
+
+Each assigned arch instantiates its SMOKE config and runs one forward /
+train step on CPU asserting output shapes and no NaNs; decode-vs-full
+consistency validates KV caches, SSM state carry-over and hybrid blocks.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke
+from repro.models import Model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=16, with_labels=True, key=KEY):
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    out = {"tokens": toks}
+    if cfg.family == "encdec":
+        out["frames"] = 0.1 * jax.random.normal(
+            key, (b, cfg.enc_len, cfg.d_model))
+    if cfg.family == "vlm":
+        out["patches"] = 0.1 * jax.random.normal(key, (b, cfg.n_patches,
+                                                       1024))
+    if with_labels:
+        out["labels"] = toks
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke(arch)
+    model = Model(cfg)
+    params = model.init(KEY)
+    loss, metrics = jax.jit(model.train_loss)(params, _batch(cfg))
+    assert np.isfinite(float(loss))
+    grads = jax.grad(lambda p: model.train_loss(p, _batch(cfg))[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes(arch):
+    cfg = get_smoke(arch)
+    model = Model(cfg)
+    params = model.init(KEY)
+    b, s = 2, 16
+    logits = model.forward_logits(params, _batch(cfg, b, s,
+                                                 with_labels=False))
+    expect_s = s + (cfg.n_patches if cfg.family == "vlm" else 0)
+    assert logits.shape == (b, expect_s, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_full_forward(arch):
+    cfg = get_smoke(arch)
+    if cfg.n_experts:
+        cfg = cfg.replace(capacity_factor=50.0)   # no token dropping
+    model = Model(cfg)
+    params = model.init(KEY)
+    b, s = 2, 12
+    toks = jax.random.randint(KEY, (b, s + 1), 0, cfg.vocab)
+    batch = _batch(cfg, b, s, with_labels=False)
+    batch["tokens"] = toks[:, :s]
+    full = dict(batch)
+    full["tokens"] = toks
+    ref = model.forward_logits(params, full)[:, -1, :]
+    pad = s + 4 + (cfg.n_patches if cfg.family == "vlm" else 0)
+    _, cache = model.prefill(params, batch, pad_to=pad)
+    got, _ = model.decode_step(params, toks[:, s:s + 1], cache)
+    rel = float(jnp.max(jnp.abs(got - ref))) / (
+        float(jnp.max(jnp.abs(ref))) + 1e-9)
+    assert rel < 5e-4, f"{arch}: decode mismatch rel={rel}"
+
+
+def test_multi_token_decode_consistency():
+    cfg = get_smoke("deepseek-7b")
+    model = Model(cfg)
+    params = model.init(KEY)
+    b, s, g = 2, 8, 4
+    toks = jax.random.randint(KEY, (b, s + g), 0, cfg.vocab)
+    full = model.forward_logits(params, {"tokens": toks})
+    _, cache = model.prefill(params, {"tokens": toks[:, :s]}, pad_to=s + g)
+    for i in range(g):
+        got, cache = model.decode_step(params, toks[:, s + i:s + i + 1],
+                                       cache)
+        ref = full[:, s + i, :]
+        rel = float(jnp.max(jnp.abs(got - ref))) / (
+            float(jnp.max(jnp.abs(ref))) + 1e-9)
+        assert rel < 5e-4, f"step {i}: rel={rel}"
+
+
+def test_sliding_window_differs_from_global():
+    cfg = get_smoke("gemma3-27b")
+    model = Model(cfg)
+    params = model.init(KEY)
+    batch = _batch(cfg, 1, 12, with_labels=False)
+    local = model.forward_logits(params, batch)
+    cfg2 = cfg.replace(sliding_window=0, global_every=0)
+    global_ = model.forward_logits(params, batch)  # same params, same cfg obj
+    m2 = Model(cfg2)
+    global_ = m2.forward_logits(params, batch)
+    assert not np.allclose(np.asarray(local), np.asarray(global_))
+
+
+def test_moe_load_balance_loss_positive():
+    cfg = get_smoke("arctic-480b")
+    model = Model(cfg)
+    params = model.init(KEY)
+    _, metrics = model.train_loss(params, _batch(cfg))
+    assert float(metrics["aux"]) >= 0.99   # >= 1 at perfect balance
+
+
+def test_full_configs_param_counts():
+    # the exact assigned configs expose plausible parameter counts
+    expect = {"arctic-480b": (4.0e11, 5.6e11),
+              "llama4-scout-17b-a16e": (0.9e11, 1.3e11),
+              "phi4-mini-3.8b": (3.0e9, 4.6e9),
+              "gemma3-27b": (2.2e10, 3.2e10),
+              "deepseek-7b": (6.0e9, 7.8e9),
+              "granite-34b": (3.0e10, 4.0e10),
+              "whisper-medium": (6.0e8, 1.1e9),
+              "mamba2-780m": (6.0e8, 1.0e9),
+              "zamba2-2.7b": (2.2e9, 3.3e9),
+              "llava-next-mistral-7b": (6.5e9, 8.0e9)}
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_counts()["total"]
+        assert lo <= n <= hi, f"{arch}: {n:.3e} not in [{lo:.1e},{hi:.1e}]"
+
+
+def test_ssd_chunk_invariance():
+    # same logits regardless of chunk size (chunked scan correctness)
+    cfg = get_smoke("mamba2-780m")
+    model = Model(cfg)
+    params = model.init(KEY)
+    batch = _batch(cfg, 1, 24, with_labels=False)
+    a = model.forward_logits(params, batch)
+    b = Model(cfg.replace(ssm_chunk=4)).forward_logits(params, batch)
+    c = Model(cfg.replace(ssm_chunk=24)).forward_logits(params, batch)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=2e-4)

@@ -1,0 +1,62 @@
+"""End-to-end behaviour of the paper's system: the full WOW pipeline
+(workflow -> dynamic engine -> 3-step scheduler + DPS -> cluster) reproduces
+the paper's headline claims, and the ML-framework adaptation trains a model
+under WOW-planned data movement."""
+import numpy as np
+import pytest
+
+from repro.sim import SimConfig, run_workflow
+from repro.workloads import ALL_WORKFLOWS, make_workflow
+
+
+SCALES = {"rnaseq": 0.08, "sarek": 0.08, "chipseq": 0.08, "rangeland": 0.02}
+
+
+@pytest.mark.parametrize("name", ALL_WORKFLOWS)
+def test_wow_improves_every_workflow(name):
+    """Paper Table II: WOW beats Nextflow-original on all 16 workflows."""
+    wf = make_workflow(name, scale=SCALES.get(name, 0.2))
+    orig = run_workflow(wf, "orig", SimConfig(dfs="ceph"))
+    wow = run_workflow(wf, "wow", SimConfig(dfs="ceph"))
+    assert wow.makespan < orig.makespan, (
+        f"{name}: wow {wow.makespan:.0f}s !< orig {orig.makespan:.0f}s")
+
+
+def test_chain_pattern_band():
+    """Paper: chain improves 86.4% (Ceph) / 94.5% (NFS); we accept >=60/75%
+    at full scale."""
+    wf = make_workflow("chain", scale=1.0)
+    for dfs, floor in (("ceph", 0.60), ("nfs", 0.75)):
+        o = run_workflow(wf, "orig", SimConfig(dfs=dfs))
+        w = run_workflow(wf, "wow", SimConfig(dfs=dfs))
+        gain = (o.makespan - w.makespan) / o.makespan
+        assert gain >= floor, f"{dfs}: gain {gain:.2%} < {floor:.0%}"
+
+
+def test_cpu_allocation_reduction():
+    """Paper: WOW cuts allocated CPU-hours (tasks don't idle on I/O)."""
+    wf = make_workflow("group_multiple", scale=0.5)
+    o = run_workflow(wf, "orig", SimConfig())
+    w = run_workflow(wf, "wow", SimConfig())
+    assert w.cpu_alloc_hours < o.cpu_alloc_hours
+
+
+def test_load_balance_gini_low():
+    """Paper §VI-A: Gini coefficients close to zero.  Measured on a wide
+    workflow (the paper's low Gini values come from full-scale runs with
+    many parallel tasks; tiny scaled-down DAGs are inherently lumpier)."""
+    wf = make_workflow("syn_seismology", scale=0.5)
+    w = run_workflow(wf, "wow", SimConfig())
+    assert w.gini_cpu < 0.35
+    assert w.gini_storage < 0.5
+
+
+def test_e2e_wow_trained_model_improves():
+    """Framework adaptation: train a small LM under the WOW-planned data
+    pipeline and verify learning happens end to end."""
+    from repro.configs import get_smoke
+    from repro.runtime import TrainConfig, Trainer
+    cfg = get_smoke("phi4-mini-3.8b")
+    t = Trainer(cfg, TrainConfig(batch=4, seq_len=32, steps=25, log_every=0))
+    _, losses = t.run()
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])

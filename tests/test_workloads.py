@@ -1,0 +1,73 @@
+"""Workload generators match the paper's Table I / Fig. 3 construction."""
+import pytest
+
+from repro.workloads import ALL_WORKFLOWS, make_workflow
+
+GB = 1_000_000_000
+
+# Table I expectations at scale=1.0
+PATTERN_COUNTS = {"all_in_one": 101, "chain": 200, "fork": 101,
+                  "group": 134, "group_multiple": 160}
+PATTERN_ABSTRACT = {"all_in_one": 2, "chain": 2, "fork": 2, "group": 2,
+                    "group_multiple": 3}
+SYN_RANGE = (190, 205)
+
+
+@pytest.mark.parametrize("name,count", sorted(PATTERN_COUNTS.items()))
+def test_pattern_counts_match_paper(name, count):
+    wf = make_workflow(name, scale=1.0)
+    assert wf.n_physical() == count
+    assert wf.n_abstract() == PATTERN_ABSTRACT[name]
+    assert wf.total_input_bytes() == 0           # patterns have no input
+
+
+def test_pattern_file_sizes_in_range():
+    wf = make_workflow("chain", scale=1.0)
+    a_files = [f for f in wf.files.values()
+               if wf.tasks[f.producer].abstract == "A"]
+    for f in a_files:
+        assert 0.8 * GB <= f.size <= 1.0 * GB    # paper: 0.8..1 GB
+
+
+def test_merge_outputs_sum_inputs():
+    wf = make_workflow("all_in_one", scale=1.0)
+    b = [t for t in wf.tasks.values() if t.abstract == "B"][0]
+    in_sum = sum(wf.files[f].size for f in b.inputs)
+    out = wf.files[b.outputs[0]].size
+    assert out == in_sum                          # "merge into one file"
+
+
+@pytest.mark.parametrize("name", ["syn_blast", "syn_bwa", "syn_cycles",
+                                  "syn_genome", "syn_montage",
+                                  "syn_seismology", "syn_soykb"])
+def test_synthetic_scales(name):
+    wf = make_workflow(name, scale=1.0)
+    assert SYN_RANGE[0] <= wf.n_physical() <= SYN_RANGE[1]
+    gen = wf.total_generated_bytes()
+    inp = wf.total_input_bytes()
+    assert 15 * GB <= inp <= 25 * GB              # ~20 GB inputs
+    assert gen / max(inp, 1) > 4                  # I/O amplification
+
+
+@pytest.mark.parametrize("name,abstract", [("rnaseq", 53), ("sarek", 49),
+                                           ("chipseq", 48),
+                                           ("rangeland", 8)])
+def test_realworld_abstract_counts_close(name, abstract):
+    wf = make_workflow(name, scale=0.2)
+    # our reconstruction approximates the abstract step count
+    assert wf.n_abstract() >= min(abstract, 8) * 0.3
+
+
+def test_realworld_volumes_scale_invariant():
+    a = make_workflow("rnaseq", scale=0.1)
+    b = make_workflow("rnaseq", scale=0.3)
+    ga, gb = a.total_generated_bytes(), b.total_generated_bytes()
+    assert abs(ga - gb) / gb < 0.25       # totals stay ~Table I under scale
+
+
+def test_all_validate():
+    for name in ALL_WORKFLOWS:
+        wf = make_workflow(name, scale=0.05)
+        wf.validate()
+        # every intermediate has at least one consumer or is terminal
+        assert wf.n_physical() > 0
