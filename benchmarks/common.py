@@ -1,6 +1,8 @@
 """Shared helpers for the paper-table benchmarks."""
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
@@ -33,3 +35,15 @@ def run(name: str, strategy: str, dfs: str = "ceph", **cfg):
 def emit(row: str) -> None:
     print(row, flush=True)
     sys.stdout.flush()
+
+
+def write_json(name: str, payload: dict) -> str:
+    """Persist machine-readable benchmark output as BENCH_<name>.json at the
+    repo root so the perf trajectory is tracked across PRs."""
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    path = os.path.join(root, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit(f"# wrote {path}")
+    return path

@@ -6,14 +6,15 @@ runtime adapter (`repro.runtime`) both drive these classes.
 from .dps import DataPlacementService
 from .ilp import AssignmentProblem, solve, solve_exact, solve_greedy
 from .priority import abstract_ranks, assign_priorities, priority_value
+from .reference import ReferenceWowScheduler
 from .scheduler import WowScheduler
 from .types import (Action, CopPlan, DFS_LOC, FileSpec, NodeState, StartCop,
                     StartTask, TaskSpec, Transfer)
 
 __all__ = [
     "Action", "AssignmentProblem", "CopPlan", "DFS_LOC",
-    "DataPlacementService", "FileSpec", "NodeState", "StartCop", "StartTask",
-    "TaskSpec", "Transfer", "WowScheduler", "abstract_ranks",
-    "assign_priorities", "priority_value", "solve", "solve_exact",
-    "solve_greedy",
+    "DataPlacementService", "FileSpec", "NodeState", "ReferenceWowScheduler",
+    "StartCop", "StartTask", "TaskSpec", "Transfer", "WowScheduler",
+    "abstract_ranks", "assign_priorities", "priority_value", "solve",
+    "solve_exact", "solve_greedy",
 ]

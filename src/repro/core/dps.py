@@ -1,4 +1,4 @@
-"""Data Placement Service (paper §III-C).
+"""Data Placement Service (paper §III-C), incremental edition.
 
 The DPS owns every intermediate file: sizes, producer, and the set of nodes
 holding a *valid* replica.  Replicas are created exclusively through COPs.
@@ -14,6 +14,30 @@ For a (task, target-node) request it plans the cheapest COP:
 
 The DPS is deliberately environment-free: the simulator and the JAX runtime
 both drive it through this interface.
+
+Incremental indices (DESIGN.md "Index invariants"):
+
+Beyond the authoritative ``file -> replica nodes`` map, the DPS maintains
+reverse indices so the scheduler's hot-loop queries are O(1)/O(inputs)
+lookups instead of set intersections over all replica sets:
+
+  * ``_node_files``       node  -> files with a valid replica on the node
+  * ``_waiting``          file  -> tracked tasks consuming the file
+  * ``_present_cnt``      task  -> {node: #inputs with a replica on node}
+  * ``_present_bytes``    task  -> {node: bytes of inputs present on node}
+  * ``_prep``             task  -> nodes where *all* inputs are present
+  * ``_node_prep_tasks``  node  -> tasks fully prepared on the node
+
+Tasks are registered with :meth:`track_task` (the scheduler does this on
+submit) and dropped with :meth:`untrack_task` (on start).  Every replica
+mutation funnels through ``_idx_add`` / ``_idx_remove`` which keep all six
+indices consistent and record tasks whose prepared-node set changed in a
+dirty set the scheduler drains via :meth:`drain_dirty_tasks`.
+
+The original from-scratch queries (``is_prepared``, ``prepared_nodes``,
+``missing_files``, ``missing_bytes``) are retained both as the generic API
+for untracked input tuples and as the reference implementations the
+equivalence tests check the indices against.
 """
 from __future__ import annotations
 
@@ -25,6 +49,8 @@ from .types import CopPlan, FileSpec, NodeId, Transfer
 W_TRAFFIC = 0.5
 W_MAXLOAD = 0.5
 
+_EMPTY: frozenset = frozenset()
+
 
 class DataPlacementService:
     def __init__(self, seed: int = 0) -> None:
@@ -34,13 +60,161 @@ class DataPlacementService:
         self._next_cop_id = 0
         # total bytes moved through COPs, for the Fig.4 overhead metric
         self.cop_bytes_total = 0
+        # ----- reverse indices (see module docstring)
+        self._node_files: dict[NodeId, set[int]] = {}
+        self._waiting: dict[int, set[int]] = {}
+        self._task_inputs: dict[int, tuple[int, ...]] = {}
+        # per-task input multiplicity: duplicated input ids count per
+        # occurrence, matching the reference missing_bytes semantics
+        self._task_mult: dict[int, dict[int, int]] = {}
+        self._task_bytes: dict[int, int] = {}
+        self._present_cnt: dict[int, dict[NodeId, int]] = {}
+        self._present_bytes: dict[int, dict[NodeId, int]] = {}
+        self._prep: dict[int, set[NodeId]] = {}
+        self._node_prep_tasks: dict[NodeId, set[int]] = {}
+        self._dirty_tasks: set[int] = set()
+
+    # ------------------------------------------------------- index plumbing
+    def _idx_add(self, file_id: int, node: NodeId) -> None:
+        locs = self._locations.setdefault(file_id, set())
+        if node in locs:
+            return
+        locs.add(node)
+        self._node_files.setdefault(node, set()).add(file_id)
+        spec = self._files.get(file_id)
+        size = spec.size if spec is not None else 0
+        for tid in self._waiting.get(file_id, _EMPTY):
+            mult = self._task_mult[tid][file_id]
+            cnt = self._present_cnt[tid]
+            c = cnt.get(node, 0) + mult
+            cnt[node] = c
+            pbytes = self._present_bytes[tid]
+            pbytes[node] = pbytes.get(node, 0) + size * mult
+            if c == len(self._task_inputs[tid]):
+                self._prep.setdefault(tid, set()).add(node)
+                self._node_prep_tasks.setdefault(node, set()).add(tid)
+                self._dirty_tasks.add(tid)
+
+    def _idx_remove(self, file_id: int, node: NodeId,
+                    drop_empty: bool = True) -> None:
+        locs = self._locations.get(file_id)
+        if locs is None or node not in locs:
+            return
+        locs.discard(node)
+        held = self._node_files.get(node)
+        if held is not None:
+            held.discard(file_id)
+        spec = self._files.get(file_id)
+        size = spec.size if spec is not None else 0
+        for tid in self._waiting.get(file_id, _EMPTY):
+            mult = self._task_mult[tid][file_id]
+            cnt = self._present_cnt[tid]
+            was_prep = cnt.get(node, 0) == len(self._task_inputs[tid])
+            c = cnt.get(node, 0) - mult
+            pbytes = self._present_bytes[tid]
+            if c <= 0:
+                cnt.pop(node, None)
+                pbytes.pop(node, None)
+            else:
+                cnt[node] = c
+                pbytes[node] = pbytes.get(node, 0) - size * mult
+            if was_prep:
+                prep = self._prep.get(tid)
+                if prep is not None:
+                    prep.discard(node)
+                npt = self._node_prep_tasks.get(node)
+                if npt is not None:
+                    npt.discard(tid)
+                self._dirty_tasks.add(tid)
+        if drop_empty and not locs:
+            self._locations.pop(file_id, None)
+
+    # --------------------------------------------------------- task tracking
+    def track_task(self, task_id: int, input_ids: tuple[int, ...]) -> None:
+        """Register a (ready) task so its prepared-node set is maintained
+        incrementally.  Input file sizes must be known (all inputs produced,
+        which is exactly when a dynamic engine submits the task)."""
+        if task_id in self._task_inputs:
+            self.untrack_task(task_id)
+        inputs = tuple(input_ids)
+        mult: dict[int, int] = {}
+        for f in inputs:
+            mult[f] = mult.get(f, 0) + 1
+        self._task_inputs[task_id] = inputs
+        self._task_mult[task_id] = mult
+        self._task_bytes[task_id] = sum(
+            self._files[f].size for f in inputs if f in self._files)
+        cnt: dict[NodeId, int] = {}
+        pbytes: dict[NodeId, int] = {}
+        for f, m in mult.items():
+            self._waiting.setdefault(f, set()).add(task_id)
+            size = self._files[f].size if f in self._files else 0
+            for n in self._locations.get(f, _EMPTY):
+                cnt[n] = cnt.get(n, 0) + m
+                pbytes[n] = pbytes.get(n, 0) + size * m
+        self._present_cnt[task_id] = cnt
+        self._present_bytes[task_id] = pbytes
+        prep = {n for n, c in cnt.items() if c == len(inputs)}
+        self._prep[task_id] = prep
+        for n in prep:
+            self._node_prep_tasks.setdefault(n, set()).add(task_id)
+        self._dirty_tasks.add(task_id)
+
+    def untrack_task(self, task_id: int) -> None:
+        self._task_inputs.pop(task_id, ())
+        for f in self._task_mult.pop(task_id, {}):
+            waiting = self._waiting.get(f)
+            if waiting is not None:
+                waiting.discard(task_id)
+                if not waiting:
+                    self._waiting.pop(f, None)
+        self._present_cnt.pop(task_id, None)
+        self._present_bytes.pop(task_id, None)
+        self._task_bytes.pop(task_id, None)
+        for n in self._prep.pop(task_id, _EMPTY):
+            npt = self._node_prep_tasks.get(n)
+            if npt is not None:
+                npt.discard(task_id)
+        self._dirty_tasks.discard(task_id)
+
+    def tracked(self, task_id: int) -> bool:
+        return task_id in self._task_inputs
+
+    def drain_dirty_tasks(self) -> set[int]:
+        """Tasks whose prepared-node set changed since the last drain."""
+        dirty = self._dirty_tasks
+        self._dirty_tasks = set()
+        return dirty
+
+    # ------------------------------------------------ indexed (fast) queries
+    def is_prepared_task(self, task_id: int, node: NodeId) -> bool:
+        return node in self._prep.get(task_id, _EMPTY)
+
+    def prepared_nodes_task(self, task_id: int) -> list[NodeId]:
+        return sorted(self._prep.get(task_id, _EMPTY))
+
+    def prep_count(self, task_id: int) -> int:
+        return len(self._prep.get(task_id, _EMPTY))
+
+    def missing_bytes_task(self, task_id: int, node: NodeId) -> int:
+        return (self._task_bytes[task_id]
+                - self._present_bytes[task_id].get(node, 0))
+
+    def tasks_prepared_on(self, node: NodeId) -> set[int]:
+        # copy: handing out the live index would let callers corrupt it
+        return set(self._node_prep_tasks.get(node, _EMPTY))
 
     # ------------------------------------------------------------------ files
     def register_file(self, f: FileSpec, location: NodeId) -> None:
         """Called when a task finishes and its output stays on the producing
-        node (§III-B: data is left where it was produced)."""
+        node (§III-B: data is left where it was produced).  Re-registering a
+        file (failure recovery re-runs the producer) resets its replica set
+        to the new producing node."""
+        for n in list(self._locations.get(f.id, _EMPTY)):
+            self._idx_remove(f.id, n, drop_empty=False)
         self._files[f.id] = f
-        self._locations[f.id] = {location}
+        self._locations.setdefault(f.id, set())
+        self._idx_add(f.id, location)
 
     def file(self, file_id: int) -> FileSpec:
         return self._files[file_id]
@@ -48,12 +222,49 @@ class DataPlacementService:
     def has_file(self, file_id: int) -> bool:
         return file_id in self._files
 
+    def file_ids(self) -> list[int]:
+        """All registered file ids (registration order)."""
+        return list(self._files)
+
     def locations(self, file_id: int) -> set[NodeId]:
         return set(self._locations.get(file_id, ()))
 
+    def add_replica(self, file_id: int, node: NodeId) -> None:
+        """Record one more valid replica (index-safe public mutator)."""
+        self._idx_add(file_id, node)
+
+    def remove_replica(self, file_id: int, node: NodeId,
+                       drop_empty: bool = True) -> None:
+        """Forget one replica (index-safe public mutator)."""
+        self._idx_remove(file_id, node, drop_empty=drop_empty)
+
+    def clear_replicas(self, file_id: int) -> None:
+        """Remove every replica but keep an (empty) location entry -- the
+        file exists in some external store only (e.g. the blob store)."""
+        for n in list(self._locations.get(file_id, _EMPTY)):
+            self._idx_remove(file_id, n, drop_empty=False)
+        self._locations.setdefault(file_id, set())
+
+    def drop_node(self, node: NodeId) -> list[int]:
+        """A node left the cluster: forget all of its replicas.  Returns the
+        (sorted) registered files whose *last* replica was lost."""
+        lost: list[int] = []
+        for fid in sorted(self._node_files.get(node, _EMPTY)):
+            self._idx_remove(fid, node, drop_empty=False)
+            if not self._locations.get(fid):
+                self._locations.pop(fid, None)
+                if fid in self._files:
+                    lost.append(fid)
+        self._node_files.pop(node, None)
+        self._node_prep_tasks.pop(node, None)
+        return lost
+
     def invalidate(self, file_id: int, only_valid: NodeId) -> None:
         """File manipulated in place (§IV-B): one valid location remains."""
-        self._locations[file_id] = {only_valid}
+        self._idx_add(file_id, only_valid)
+        for n in list(self._locations.get(file_id, _EMPTY)):
+            if n != only_valid:
+                self._idx_remove(file_id, n, drop_empty=False)
 
     def delete_replicas(self, file_id: int, keep: int = 0) -> int:
         """GC once all consumers are done; returns bytes reclaimed."""
@@ -62,17 +273,19 @@ class DataPlacementService:
             return 0
         size = self._files[file_id].size
         drop = max(0, len(locs) - keep)
+        for n in sorted(locs)[keep:]:
+            self._idx_remove(file_id, n, drop_empty=False)
         if keep == 0:
             self._locations.pop(file_id, None)
-        else:
-            keeplist = sorted(locs)[:keep]
-            self._locations[file_id] = set(keeplist)
         return drop * size
 
     def replica_count(self, file_id: int) -> int:
         return len(self._locations.get(file_id, ()))
 
-    # ----------------------------------------------------------------- status
+    # ------------------------------------------- status (reference queries)
+    # From-scratch recomputation over the replica sets.  These remain the
+    # behavioural reference for the indexed fast path (equivalence-tested)
+    # and the generic API for input tuples that are not tracked as a task.
     def is_prepared(self, input_ids: tuple[int, ...], node: NodeId) -> bool:
         """A node is *prepared* when every intermediate input has a valid
         replica on it (workflow inputs in the DFS are readable anywhere)."""
@@ -100,6 +313,11 @@ class DataPlacementService:
     def missing_bytes(self, input_ids: tuple[int, ...], node: NodeId) -> int:
         return sum(f.size for f in self.missing_files(input_ids, node))
 
+    # explicit aliases used by the equivalence tests / reference scheduler
+    is_prepared_reference = is_prepared
+    prepared_nodes_reference = prepared_nodes
+    missing_bytes_reference = missing_bytes
+
     # ------------------------------------------------------------------- COPs
     def plan_cop(
         self,
@@ -123,6 +341,8 @@ class DataPlacementService:
             srcs = self._locations.get(f.id, set())
             if allowed_sources is not None:
                 srcs = {s for s in srcs if s in allowed_sources or s == target}
+            else:
+                srcs = set(srcs)
             srcs.discard(target)
             if not srcs:
                 return None
@@ -142,13 +362,14 @@ class DataPlacementService:
     def commit_cop(self, plan: CopPlan) -> None:
         """All-or-nothing replica registration on COP success (§IV-C)."""
         for t in plan.transfers:
-            self._locations.setdefault(t.file_id, set()).add(t.dst)
+            self._idx_add(t.file_id, t.dst)
         self.cop_bytes_total += plan.total_bytes
 
     # --------------------------------------------------------------- metrics
     def total_replica_bytes(self) -> int:
         return sum(self._files[f].size * len(locs)
-                   for f, locs in self._locations.items())
+                   for f, locs in self._locations.items()
+                   if f in self._files)
 
     def unique_bytes(self) -> int:
         return sum(f.size for f in self._files.values())

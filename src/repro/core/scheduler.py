@@ -1,4 +1,4 @@
-"""The WOW three-step scheduler (paper §III-B).
+"""The WOW three-step scheduler (paper §III-B), dirty-set edition.
 
 Driven by an environment (discrete-event simulator or the JAX runtime
 adapter) through a narrow event interface:
@@ -6,12 +6,33 @@ adapter) through a narrow event interface:
     submit(task)                  -- task entered the job queue (ready)
     on_task_finished(task, node)  -- frees node resources
     on_cop_finished(plan, ok)     -- commits replicas, frees COP slots
+    note_node_added(node)         -- elastic join
+    note_node_removed(node)       -- node failed / left
     schedule() -> [Action]        -- runs steps 1..3, reserves resources for
                                      StartTask actions it returns
 
 The environment applies the returned actions, advances time, and calls
 ``schedule()`` again after every event (task finished / COP finished / task
 submitted), exactly like the paper's iteration loop.
+
+Incremental contract (DESIGN.md "Dirty-set contracts"): instead of rescanning
+all ready tasks x all nodes per event, every event marks only what it
+touched --
+
+  * ``submit`` marks the new task dirty (and registers it with the DPS so
+    its prepared-node set is maintained incrementally),
+  * ``on_task_finished`` marks the freed *node* dirty,
+  * ``on_cop_finished`` updates the free-COP-slot set; the replica commit
+    marks affected consumer tasks dirty inside the DPS,
+  * step-1 reservations mark the assigned nodes dirty.
+
+``schedule()`` expands dirty nodes to the tasks prepared on them (via the
+DPS reverse index), refreshes the cached start candidates for exactly the
+dirty tasks, and hands the ILP the (usually small) startable subproblem.
+Steps 2-3 iterate the free-COP-slot set rather than all nodes and exit as
+soon as no COP slot remains.  Decisions are bit-identical to
+``core.reference.ReferenceWowScheduler`` (equivalence-tested) under the
+standing repo convention that node ids are enumerated in ascending order.
 """
 from __future__ import annotations
 
@@ -43,9 +64,26 @@ class WowScheduler:
         self.cops_created: int = 0
         self.tasks_started: int = 0
 
+        # ----- incremental state (see module docstring)
+        self._seq = 0
+        self._submit_seq: dict[int, int] = {}      # ILP task order = FIFO
+        self._dirty_tasks: set[int] = set()
+        self._dirty_nodes: set[int] = set()
+        self._no_input_ready: set[int] = set()     # prepared everywhere
+        self._startable: dict[int, list[int]] = {} # cached prep ∩ fits, != []
+        self._free_slot_nodes: set[int] = {
+            n for n, s in nodes.items() if s.active_cops < c_node}
+
     # ------------------------------------------------------------- events
     def submit(self, task: TaskSpec) -> None:
         self.ready[task.id] = task
+        self._seq += 1
+        self._submit_seq[task.id] = self._seq
+        if task.inputs:
+            self.dps.track_task(task.id, task.inputs)
+        else:
+            self._no_input_ready.add(task.id)
+        self._dirty_tasks.add(task.id)
 
     def on_task_finished(self, task_id: int, node: int) -> None:
         self.running.pop(task_id, None)
@@ -53,16 +91,30 @@ class WowScheduler:
         t_node.free_mem += self._mem_of(task_id)
         t_node.free_cores += self._cores_of(task_id)
         self._finished_specs.pop(task_id, None)
+        self._dirty_nodes.add(node)
 
     def on_cop_finished(self, plan: CopPlan, ok: bool = True) -> None:
         self.active_cops.pop(plan.id, None)
         self.cops_per_task[plan.task_id] = max(
             0, self.cops_per_task.get(plan.task_id, 0) - 1)
         for n in plan.nodes:
-            self.nodes[n].active_cops = max(0, self.nodes[n].active_cops - 1)
+            state = self.nodes[n]
+            state.active_cops = max(0, state.active_cops - 1)
+            if state.active_cops < self.c_node:
+                self._free_slot_nodes.add(n)
         self.inflight_targets.discard((plan.task_id, plan.target))
         if ok:
-            self.dps.commit_cop(plan)
+            self.dps.commit_cop(plan)   # marks consumer tasks dirty in DPS
+
+    def note_node_added(self, node: int) -> None:
+        self._dirty_nodes.add(node)
+        if self.nodes[node].active_cops < self.c_node:
+            self._free_slot_nodes.add(node)
+
+    def note_node_removed(self, node: int) -> None:
+        # tasks prepared on the node were dirtied by dps.drop_node already
+        self._free_slot_nodes.discard(node)
+        self._dirty_nodes.discard(node)
 
     # remember resource shapes of running tasks so finish can free them even
     # after the TaskSpec left the ready map
@@ -82,19 +134,43 @@ class WowScheduler:
         self._step3_speculative_prepare(actions)
         return actions
 
+    def _refresh_candidates(self) -> None:
+        """Recompute cached start candidates for exactly the dirty tasks."""
+        dirty = self._dirty_tasks
+        dirty |= self.dps.drain_dirty_tasks()
+        for n in self._dirty_nodes:
+            if n in self.nodes:
+                dirty |= self.dps.tasks_prepared_on(n)
+        self._dirty_nodes.clear()
+        self._dirty_tasks = set()
+        # input-less tasks are prepared everywhere: any node change matters
+        dirty |= self._no_input_ready
+        node_order: list[int] | None = None
+        for tid in dirty:
+            t = self.ready.get(tid)
+            if t is None:
+                self._startable.pop(tid, None)
+                continue
+            if t.inputs:
+                prep = self.dps.prepared_nodes_task(tid)
+            else:
+                if node_order is None:
+                    node_order = sorted(self.nodes)
+                prep = node_order
+            cands = [n for n in prep if self.nodes[n].fits(t)]
+            if cands:
+                self._startable[tid] = cands
+            else:
+                self._startable.pop(tid, None)
+
     # Step 1: assign ready tasks to prepared nodes via the ILP.
     def _step1_start_prepared(self, actions: list[Action]) -> set[int]:
-        node_ids = list(self.nodes)
-        candidates: dict[int, list[int]] = {}
-        tasks: list[TaskSpec] = []
-        for t in self.ready.values():
-            prep = self.dps.prepared_nodes(t.inputs, node_ids)
-            prep = [n for n in prep if self.nodes[n].fits(t)]
-            if prep:
-                tasks.append(t)
-                candidates[t.id] = prep
-        if not tasks:
+        self._refresh_candidates()
+        if not self._startable:
             return set()
+        order = sorted(self._startable, key=self._submit_seq.__getitem__)
+        tasks = [self.ready[tid] for tid in order]
+        candidates = {tid: self._startable[tid] for tid in order}
         assign = solve(AssignmentProblem(tasks, candidates, self.nodes))
         started: set[int] = set()
         for tid, n in sorted(assign.items()):
@@ -107,6 +183,14 @@ class WowScheduler:
             started.add(tid)
             self.tasks_started += 1
             actions.append(StartTask(tid, n))
+            # incremental bookkeeping: the reservation changed n's resources
+            self._dirty_nodes.add(n)
+            self._startable.pop(tid, None)
+            self._submit_seq.pop(tid, None)
+            if t.inputs:
+                self.dps.untrack_task(tid)
+            else:
+                self._no_input_ready.discard(tid)
         return started
 
     def _cop_slots_free(self, node_id: int) -> bool:
@@ -120,7 +204,10 @@ class WowScheduler:
         self.cops_per_task[plan.task_id] = (
             self.cops_per_task.get(plan.task_id, 0) + 1)
         for n in plan.nodes:
-            self.nodes[n].active_cops += 1
+            state = self.nodes[n]
+            state.active_cops += 1
+            if state.active_cops >= self.c_node:
+                self._free_slot_nodes.discard(n)
         self.inflight_targets.add((plan.task_id, plan.target))
         self.cops_created += 1
         actions.append(StartCop(plan))
@@ -128,35 +215,38 @@ class WowScheduler:
     # Step 2: prepare unassigned ready tasks on nodes with free *compute*.
     def _step2_prepare_for_free_compute(self, actions: list[Action],
                                         started: set[int]) -> None:
-        node_ids = list(self.nodes)
-        waiting = [t for t in self.ready.values() if t.id not in started
-                   and t.inputs]
+        del started  # step 1 already popped started tasks from self.ready
+        if not self._free_slot_nodes:
+            return
+        waiting = [t for t in self.ready.values() if t.inputs]
         if not waiting:
             return
+        dps = self.dps
+
         # ascending |N_prep|, ties by number of running COPs for the task
         def key(t: TaskSpec) -> tuple:
-            return (len(self.dps.prepared_nodes(t.inputs, node_ids)),
-                    self.cops_per_task.get(t.id, 0), -t.priority, t.id)
+            return (dps.prep_count(t.id), self.cops_per_task.get(t.id, 0),
+                    -t.priority, t.id)
 
         for t in sorted(waiting, key=key):
+            if not self._free_slot_nodes:
+                break               # no COP can start or source anywhere
             if not self._task_cop_budget(t.id):
                 continue
-            allowed_src = {n for n in node_ids if self._cop_slots_free(n)}
             # nodes with free compute capacity, spare COP slot, not already
             # prepared / being prepared
             cands = [
-                n for n in node_ids
+                n for n in self._free_slot_nodes
                 if self.nodes[n].fits(t)
-                and self._cop_slots_free(n)
                 and (t.id, n) not in self.inflight_targets
-                and not self.dps.is_prepared(t.inputs, n)
+                and not dps.is_prepared_task(t.id, n)
             ]
             if not cands:
                 continue
             # earliest start ~ fewest missing bytes (paper §IV-C)
-            cands.sort(key=lambda n: (self.dps.missing_bytes(t.inputs, n), n))
+            cands.sort(key=lambda n: (dps.missing_bytes_task(t.id, n), n))
             for n in cands:
-                plan = self.dps.plan_cop(t.id, t.inputs, n, allowed_src)
+                plan = dps.plan_cop(t.id, t.inputs, n, self._free_slot_nodes)
                 if plan is not None:
                     self._start_cop(plan, actions)
                     break
@@ -164,24 +254,25 @@ class WowScheduler:
     # Step 3: use leftover network capacity to speculatively prepare
     # high-priority tasks on compute-busy nodes.
     def _step3_speculative_prepare(self, actions: list[Action]) -> None:
-        node_ids = list(self.nodes)
+        if not self._free_slot_nodes:
+            return
+        dps = self.dps
         todo = [t for t in self.ready.values()
                 if t.inputs and self._task_cop_budget(t.id)]
         for t in sorted(todo, key=lambda t: (-t.priority, t.id)):
-            allowed_src = {n for n in node_ids if self._cop_slots_free(n)}
-            cands = [
-                n for n in node_ids
-                if self._cop_slots_free(n)
-                and (t.id, n) not in self.inflight_targets
-                and not self.dps.is_prepared(t.inputs, n)
+            if not self._free_slot_nodes:
+                break
+            cands = sorted(
+                n for n in self._free_slot_nodes
+                if (t.id, n) not in self.inflight_targets
+                and not dps.is_prepared_task(t.id, n)
                 and t.mem <= self.nodes[n].mem        # could ever run here
-                and t.cores <= self.nodes[n].cores
-            ]
+                and t.cores <= self.nodes[n].cores)
             if not cands:
                 continue
             best: CopPlan | None = None
             for n in cands:
-                plan = self.dps.plan_cop(t.id, t.inputs, n, allowed_src)
+                plan = dps.plan_cop(t.id, t.inputs, n, self._free_slot_nodes)
                 if plan is not None and (best is None or plan.price < best.price):
                     best = plan
             if best is not None:

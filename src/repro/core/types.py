@@ -70,14 +70,16 @@ class NodeState:
     id: NodeId
     mem: int                       # total memory
     cores: float                   # total cores
-    free_mem: int = 0
-    free_cores: float = 0.0
+    # None means "fully free" -- a node legitimately constructed with zero
+    # free resources (fully loaded, e.g. on elastic re-join) keeps its zeros.
+    free_mem: Optional[int] = None
+    free_cores: Optional[float] = None
     active_cops: int = 0           # COPs this node participates in
 
     def __post_init__(self) -> None:
-        if self.free_mem == 0:
+        if self.free_mem is None:
             self.free_mem = self.mem
-        if self.free_cores == 0.0:
+        if self.free_cores is None:
             self.free_cores = self.cores
 
     def fits(self, task: TaskSpec) -> bool:

@@ -84,7 +84,7 @@ class WowPrefetchPlanner:
             if not self.dps.is_prepared((fid,), host):
                 fetches.append((host, shard_id))
                 # record the replica the fetch will create
-                self.dps._locations.setdefault(fid, set()).add(host)
+                self.dps.add_replica(fid, host)
         return fetches
 
     def _register(self, shard_id: int) -> int:
@@ -93,18 +93,18 @@ class WowPrefetchPlanner:
             self.dps.register_file(
                 FileSpec(id=fid, size=self.shard_bytes, producer=-1),
                 location=-1)
-            self.dps._locations[fid] = set()   # blob store only, no host yet
+            self.dps.clear_replicas(fid)   # blob store only, no host yet
         return fid
 
     def recover_host(self, lost: int) -> int:
         """Drop a host's replicas; returns how many shards remain fetchable
         from peer hosts (vs. the blob store)."""
         peers = 0
-        for fid in list(self.dps._locations):
-            locs = self.dps._locations[fid]
+        for fid in self.dps.file_ids():
+            locs = self.dps.locations(fid)
             if lost in locs:
-                locs.discard(lost)
-                if locs:
+                self.dps.remove_replica(fid, lost, drop_empty=False)
+                if locs - {lost}:
                     peers += 1
         return peers
 

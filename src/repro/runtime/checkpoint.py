@@ -118,7 +118,7 @@ class ReplicaPlacer:
             self.dps.register_file(
                 FileSpec(id=i, size=shard_sizes[i], producer=-1), hosts[0])
             for h in hosts[1:]:
-                self.dps._locations[i].add(h)
+                self.dps.add_replica(i, h)
         self.load = load
         return placement
 
@@ -126,8 +126,8 @@ class ReplicaPlacer:
         """(#shards recoverable from surviving peers, #total)."""
         ok = 0
         total = 0
-        for fid, locs in self.dps._locations.items():
+        for fid in self.dps.file_ids():
             total += 1
-            if locs - lost_hosts:
+            if self.dps.locations(fid) - lost_hosts:
                 ok += 1
         return ok, total

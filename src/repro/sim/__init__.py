@@ -2,14 +2,15 @@
 from .dfs import CephModel, DfsModel, NfsModel
 from .engine import DeadlockError, SimConfig, Simulation, run_workflow
 from .metrics import SimResult, efficiency, gini
-from .network import Flow, FlowManager, build_links
+from .network import Flow, FlowManager, ReferenceFlowManager, build_links
 from .strategies import (BaseStrategy, CwsStrategy, OrigStrategy,
                          WowStrategy, make_strategy)
 from .workflow import Workflow
 
 __all__ = [
     "BaseStrategy", "CephModel", "CwsStrategy", "DeadlockError", "DfsModel",
-    "Flow", "FlowManager", "NfsModel", "OrigStrategy", "SimConfig",
-    "SimResult", "Simulation", "Workflow", "WowStrategy", "build_links",
-    "efficiency", "gini", "make_strategy", "run_workflow",
+    "Flow", "FlowManager", "NfsModel", "OrigStrategy",
+    "ReferenceFlowManager", "SimConfig", "SimResult", "Simulation",
+    "Workflow", "WowStrategy", "build_links", "efficiency", "gini",
+    "make_strategy", "run_workflow",
 ]

@@ -19,7 +19,7 @@ from ..core import (DFS_LOC, FileSpec, NodeState, StartCop, StartTask,
 from ..core.types import CopPlan
 from .dfs import CephModel, DfsModel, NfsModel
 from .metrics import SimResult, gini
-from .network import FlowManager, build_links
+from .network import FlowManager, ReferenceFlowManager, build_links
 from .strategies import BaseStrategy, WowStrategy, make_strategy
 from .workflow import Workflow
 
@@ -43,6 +43,9 @@ class SimConfig:
     c_task: int = 2
     seed: int = 0
     gc_replicas: bool = False            # paper kept all replicas
+    # run on the retained pre-refactor implementations (equivalence tests)
+    reference_flow: bool = False         # ReferenceFlowManager
+    reference_core: bool = False         # ReferenceWowScheduler inside wow
 
 
 @dataclasses.dataclass
@@ -78,7 +81,7 @@ class Simulation:
         }
         self.strategy: BaseStrategy = make_strategy(
             strategy, self.nodes, c_node=cfg.c_node, c_task=cfg.c_task,
-            seed=cfg.seed)
+            seed=cfg.seed, reference_core=cfg.reference_core)
 
         extra: tuple[int, ...] = ()
         self.nfs_server = cfg.n_nodes
@@ -94,7 +97,8 @@ class Simulation:
                            extra_net_bw=cfg.net_bw,
                            extra_disk_read_bw=cfg.nfs_disk_read_bw,
                            extra_disk_write_bw=cfg.nfs_disk_write_bw)
-        self.fm = FlowManager(caps)
+        fm_cls = ReferenceFlowManager if cfg.reference_flow else FlowManager
+        self.fm = fm_cls(caps)
 
         self.ranks = abstract_ranks(wf.abstract_edges)
         self.file_sizes = {f.id: f.size for f in wf.files.values()}
@@ -117,6 +121,8 @@ class Simulation:
         self.tasks_no_cop = 0
         self._scheduled_failures: list[tuple[float, int]] = []
         self._scheduled_joins: list[tuple[float, int]] = []
+        # (time, kind, task id, node) per applied action -- equivalence tests
+        self.action_log: list[tuple[float, str, int, int]] = []
 
     # ------------------------------------------------------------- plumbing
     def _push_timer(self, t: float, kind: str, payload: object) -> None:
@@ -151,8 +157,12 @@ class Simulation:
     def _iterate(self) -> None:
         for act in self.strategy.iterate():
             if isinstance(act, StartTask):
+                self.action_log.append((self.time, "task", act.task_id,
+                                        act.node))
                 self._start_task(act.task_id, act.node)
             elif isinstance(act, StartCop):
+                self.action_log.append((self.time, "cop", act.plan.task_id,
+                                        act.plan.target))
                 self._start_cop(act.plan)
 
     def _start_task(self, tid: int, node: int) -> None:
@@ -320,25 +330,13 @@ class Simulation:
                     self.fm.remove(fl)
                 self.cop_runs.pop(cid)
                 self.strategy.on_cop_finished(cop.plan, ok=False)
-        # drop replicas; recover lost files by re-running producers
-        lost = self._drop_replicas(node)
+        # drop replicas (index-safe); recover lost files by re-running
+        # their producers
+        lost = dps.drop_node(node)
         self.nodes.pop(node, None)
+        self.strategy.on_node_removed(node)
         for f in lost:
             self._recover_file(f)
-
-    def _drop_replicas(self, node: int) -> list[int]:
-        dps = self.strategy.dps
-        lost: list[int] = []
-        for f in list(self.wf.files):
-            locs = dps.locations(f)
-            if node in locs:
-                locs.discard(node)
-                if locs:
-                    dps._locations[f] = locs
-                elif dps.has_file(f):
-                    dps._locations.pop(f, None)
-                    lost.append(f)
-        return lost
 
     def _recover_file(self, file_id: int, force: bool = False) -> None:
         """Re-execute the producer (transitively) of a lost file.
@@ -379,6 +377,7 @@ class Simulation:
                          ("dr", self.cfg.disk_read_bw),
                          ("dw", self.cfg.disk_write_bw)):
             self.fm.capacities[(kind, node_id)] = bw
+        self.strategy.on_node_added(node_id)
 
     # ------------------------------------------------------------------ run
     def run(self, max_steps: int = 50_000_000) -> SimResult:

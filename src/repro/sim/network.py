@@ -11,36 +11,95 @@ progressive-filling max-min fair allocation: the most contended link fixes
 the fair share of its flows, capacities shrink, repeat.  This captures the
 paper's central network effects -- the NFS single-link saturation, COP
 bandwidth splitting under c_node, and disk-vs-network asymmetry -- without
-packet-level detail (DESIGN.md §7.3).
+packet-level detail (see DESIGN.md "Flow-level network model").
+
+Incremental engine (DESIGN.md "Heap-driven flow simulation"):
+
+``FlowManager`` keeps its own virtual clock and settles each flow's byte
+count lazily -- a flow's remaining bytes are only materialised when its rate
+changes.  Completions come from a min-heap keyed by the virtual-time ETA;
+each recompute bumps the affected flows' *rate epoch* so stale heap entries
+are recognised and discarded on pop.  ``recompute`` re-runs progressive
+filling only over the connected component of links reachable from flows
+added/removed since the last call: max-min allocations of link-disjoint
+components are independent, so untouched flows keep both their rate and
+their heap entries.  ``ReferenceFlowManager`` below retains the original
+scan-everything implementation as the equivalence-test oracle.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import math
-from typing import Callable, Hashable
+from typing import Hashable
 
 LinkId = tuple[str, int]
+
+# < 1 byte left => complete (sub-byte remainders are float dust, not data)
+_DUST = 0.5
 
 
 @dataclasses.dataclass
 class Flow:
     id: int
     links: tuple[LinkId, ...]
-    remaining: float               # bytes
+    remaining: float               # bytes, as of `settled` virtual time
     tag: Hashable                  # owner handle (task phase / COP)
     rate: float = 0.0
+    settled: float = 0.0           # virtual time `remaining` refers to
+    epoch: int = 0                 # bumped whenever `rate` is reassigned
 
     def eta(self) -> float:
-        # sub-byte remainders are float dust, not data
-        if self.remaining <= 0.5:
+        if self.remaining <= _DUST:
             return 0.0
         if self.rate <= 0:
             return math.inf
         return self.remaining / self.rate
 
 
+def _progressive_fill(flows: list[Flow],
+                      capacities: dict[LinkId, float]) -> None:
+    """Classic progressive filling over ``flows``; sets ``f.rate``.
+
+    Bottleneck selection order matches the reference implementation: the
+    first strictly-smaller fair share wins, links iterated in first-flow
+    insertion order, so allocations are bit-identical to a full recompute.
+    """
+    remaining_cap: dict[LinkId, float] = {}
+    link_flows: dict[LinkId, set[int]] = {}
+    for f in flows:
+        for l in f.links:
+            link_flows.setdefault(l, set()).add(f.id)
+            remaining_cap.setdefault(l, capacities[l])
+    unfrozen = {f.id for f in flows}
+    by_id = {f.id: f for f in flows}
+    while unfrozen:
+        best_share = math.inf
+        best_link: LinkId | None = None
+        for l, fids in link_flows.items():
+            n = len(fids)
+            if n == 0:
+                continue
+            share = remaining_cap[l] / n
+            if share < best_share:
+                best_share = share
+                best_link = l
+        if best_link is None:
+            break
+        for fid in list(link_flows[best_link]):
+            f = by_id[fid]
+            f.rate = best_share
+            unfrozen.discard(fid)
+            for l in f.links:
+                link_flows[l].discard(fid)
+                remaining_cap[l] -= best_share
+                if remaining_cap[l] < 0:
+                    remaining_cap[l] = 0.0
+        link_flows[best_link].clear()
+
+
 class FlowManager:
-    """Holds active flows and computes max-min fair rates.
+    """Holds active flows and computes max-min fair rates incrementally.
 
     The engine batches adds/removes per event step and calls ``recompute``
     once, then asks for ``next_completion`` and ``advance``s virtual time.
@@ -50,9 +109,142 @@ class FlowManager:
         self.capacities = capacities
         self.flows: dict[int, Flow] = {}
         self._next_id = 0
-        self._dirty = False
+        self.now = 0.0                              # internal virtual clock
+        self._dirty_links: set[LinkId] = set()
+        self._link_flows: dict[LinkId, set[int]] = {}  # persistent index
+        # heap entries: (eta, flow id, epoch); entries go stale when the
+        # flow is removed or its epoch moved on -- skipped on pop.
+        self._completions: list[tuple[float, int, int]] = []  # half-byte ETA
+        self._horizon: list[tuple[float, int, int]] = []      # full ETA
 
     # ------------------------------------------------------------------ API
+    def add(self, links: tuple[LinkId, ...], nbytes: float,
+            tag: Hashable) -> Flow:
+        for l in links:
+            if l not in self.capacities:
+                raise KeyError(f"unknown link {l}")
+        f = Flow(self._next_id, links, max(float(nbytes), 0.0), tag,
+                 settled=self.now)
+        self._next_id += 1
+        self.flows[f.id] = f
+        for l in links:
+            self._link_flows.setdefault(l, set()).add(f.id)
+        self._dirty_links.update(links)
+        return f
+
+    def remove(self, flow_id: int) -> None:
+        f = self.flows.pop(flow_id, None)
+        if f is None:
+            return
+        for l in f.links:
+            fids = self._link_flows.get(l)
+            if fids is not None:
+                fids.discard(flow_id)
+                if not fids:
+                    self._link_flows.pop(l, None)
+        self._dirty_links.update(f.links)
+
+    def _component(self) -> list[Flow]:
+        """Flows transitively sharing a link with any dirty link."""
+        seen_links: set[LinkId] = set()
+        comp: dict[int, Flow] = {}
+        stack = [l for l in self._dirty_links]
+        while stack:
+            l = stack.pop()
+            if l in seen_links:
+                continue
+            seen_links.add(l)
+            for fid in self._link_flows.get(l, ()):
+                if fid in comp:
+                    continue
+                f = self.flows[fid]
+                comp[fid] = f
+                stack.extend(f.links)
+        # ascending id == insertion order of the reference full recompute
+        return [comp[fid] for fid in sorted(comp)]
+
+    def _push(self, f: Flow) -> None:
+        if f.remaining <= _DUST:
+            heapq.heappush(self._completions, (self.now, f.id, f.epoch))
+            heapq.heappush(self._horizon, (self.now, f.id, f.epoch))
+        elif f.rate > 0:
+            half = f.settled + (f.remaining - _DUST) / f.rate
+            full = f.settled + f.remaining / f.rate
+            heapq.heappush(self._completions, (half, f.id, f.epoch))
+            heapq.heappush(self._horizon, (full, f.id, f.epoch))
+        # rate == 0: no ETA; the flow re-enters a heap when its component
+        # is recomputed with capacity to give
+
+    def recompute(self) -> None:
+        """Progressive filling over the dirty connected component only."""
+        if not self._dirty_links:
+            return
+        comp = self._component()
+        self._dirty_links.clear()
+        if not comp:
+            return
+        for f in comp:
+            # settle lazily-advanced byte counts before the rate changes
+            if f.rate > 0 and self.now > f.settled:
+                f.remaining = max(f.remaining - f.rate * (self.now - f.settled),
+                                  0.0)
+            f.settled = self.now
+        _progressive_fill(comp, self.capacities)
+        for f in comp:
+            f.epoch += 1
+            self._push(f)
+
+    def next_completion(self) -> tuple[float, Flow | None]:
+        """(dt, flow) of the earliest finishing flow at current rates."""
+        while self._horizon:
+            eta, fid, epoch = self._horizon[0]
+            f = self.flows.get(fid)
+            if f is None or f.epoch != epoch:
+                heapq.heappop(self._horizon)
+                continue
+            return max(eta - self.now, 0.0), f
+        return math.inf, None
+
+    def advance(self, dt: float) -> list[Flow]:
+        """Progress virtual time by ``dt``; returns completed flows
+        (removed).  Untouched flows advance lazily -- O(completions)."""
+        self.now += dt
+        done: list[Flow] = []
+        while self._completions:
+            eta, fid, epoch = self._completions[0]
+            if eta > self.now:
+                break
+            heapq.heappop(self._completions)
+            f = self.flows.get(fid)
+            if f is None or f.epoch != epoch:
+                continue
+            f.remaining = 0.0
+            f.settled = self.now
+            done.append(f)
+        # reference completion order == flow insertion order (ascending id)
+        done.sort(key=lambda f: f.id)
+        for f in done:
+            self.remove(f.id)
+        return done
+
+    @property
+    def active(self) -> int:
+        return len(self.flows)
+
+
+class ReferenceFlowManager:
+    """Pre-refactor FlowManager: full recompute + O(flows) scans per event.
+
+    Frozen on purpose -- this is the oracle the incremental implementation
+    is equivalence-tested against (tests/test_incremental.py).
+    """
+
+    def __init__(self, capacities: dict[LinkId, float]) -> None:
+        self.capacities = capacities
+        self.flows: dict[int, Flow] = {}
+        self._next_id = 0
+        self._dirty = False
+
     def add(self, links: tuple[LinkId, ...], nbytes: float,
             tag: Hashable) -> Flow:
         for l in links:
@@ -69,48 +261,15 @@ class FlowManager:
         self._dirty = True
 
     def recompute(self) -> None:
-        """Progressive filling over the links used by active flows."""
         if not self._dirty:
             return
         self._dirty = False
         flows = list(self.flows.values())
         if not flows:
             return
-        remaining_cap: dict[LinkId, float] = {}
-        link_flows: dict[LinkId, set[int]] = {}
-        for f in flows:
-            for l in f.links:
-                link_flows.setdefault(l, set()).add(f.id)
-                remaining_cap.setdefault(l, self.capacities[l])
-        unfrozen = {f.id for f in flows}
-        by_id = {f.id: f for f in flows}
-        while unfrozen:
-            # bottleneck link = min fair share among links with unfrozen flows
-            best_share = math.inf
-            best_link: LinkId | None = None
-            for l, fids in link_flows.items():
-                n = len(fids)
-                if n == 0:
-                    continue
-                share = remaining_cap[l] / n
-                if share < best_share:
-                    best_share = share
-                    best_link = l
-            if best_link is None:
-                break
-            for fid in list(link_flows[best_link]):
-                f = by_id[fid]
-                f.rate = best_share
-                unfrozen.discard(fid)
-                for l in f.links:
-                    link_flows[l].discard(fid)
-                    remaining_cap[l] -= best_share
-                    if remaining_cap[l] < 0:
-                        remaining_cap[l] = 0.0
-            link_flows[best_link].clear()
+        _progressive_fill(flows, self.capacities)
 
     def next_completion(self) -> tuple[float, Flow | None]:
-        """(dt, flow) of the earliest finishing flow at current rates."""
         best_dt, best = math.inf, None
         for f in self.flows.values():
             dt = f.eta()
@@ -119,11 +278,10 @@ class FlowManager:
         return best_dt, best
 
     def advance(self, dt: float) -> list[Flow]:
-        """Progress all flows by ``dt``; returns completed flows (removed)."""
         done: list[Flow] = []
         for f in self.flows.values():
             f.remaining -= f.rate * dt
-            if f.remaining <= 0.5:       # < 1 byte left => complete
+            if f.remaining <= _DUST:
                 f.remaining = 0.0
                 done.append(f)
         for f in done:

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 from ..core import (DataPlacementService, NodeState, StartTask, TaskSpec,
                     WowScheduler)
+from ..core.reference import ReferenceWowScheduler
 from ..core.types import Action
 
 
@@ -34,6 +35,12 @@ class BaseStrategy:
         self.nodes[node].free_cores += t.cores
 
     def on_cop_finished(self, plan, ok: bool = True) -> None:  # noqa: ARG002
+        pass
+
+    def on_node_added(self, node: int) -> None:  # noqa: ARG002
+        pass
+
+    def on_node_removed(self, node: int) -> None:  # noqa: ARG002
         pass
 
     def _reserve(self, t: TaskSpec, node: int) -> None:
@@ -109,11 +116,12 @@ class WowStrategy(BaseStrategy):
     local_io = True
 
     def __init__(self, nodes: dict[int, NodeState], c_node: int = 1,
-                 c_task: int = 2, seed: int = 0) -> None:
+                 c_task: int = 2, seed: int = 0,
+                 reference_core: bool = False) -> None:
         super().__init__(nodes)
         self.dps = DataPlacementService(seed=seed)
-        self.sched = WowScheduler(nodes, self.dps, c_node=c_node,
-                                  c_task=c_task)
+        sched_cls = ReferenceWowScheduler if reference_core else WowScheduler
+        self.sched = sched_cls(nodes, self.dps, c_node=c_node, c_task=c_task)
         self._specs: dict[int, TaskSpec] = {}
 
     def submit(self, task: TaskSpec) -> None:
@@ -130,13 +138,21 @@ class WowStrategy(BaseStrategy):
     def on_cop_finished(self, plan, ok: bool = True) -> None:
         self.sched.on_cop_finished(plan, ok)
 
+    def on_node_added(self, node: int) -> None:
+        self.sched.note_node_added(node)
+
+    def on_node_removed(self, node: int) -> None:
+        self.sched.note_node_removed(node)
+
 
 def make_strategy(name: str, nodes: dict[int, NodeState], *, c_node: int = 1,
-                  c_task: int = 2, seed: int = 0) -> BaseStrategy:
+                  c_task: int = 2, seed: int = 0,
+                  reference_core: bool = False) -> BaseStrategy:
     if name == "orig":
         return OrigStrategy(nodes)
     if name == "cws":
         return CwsStrategy(nodes)
     if name == "wow":
-        return WowStrategy(nodes, c_node=c_node, c_task=c_task, seed=seed)
+        return WowStrategy(nodes, c_node=c_node, c_task=c_task, seed=seed,
+                           reference_core=reference_core)
     raise ValueError(f"unknown strategy {name!r}")

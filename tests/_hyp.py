@@ -1,0 +1,83 @@
+"""Optional-hypothesis shim for the test suite.
+
+The container this repo is developed in does not ship ``hypothesis`` (and
+nothing may be pip-installed), yet the property tests are worth keeping.
+Importing ``given`` / ``settings`` / ``st`` from here uses the real
+hypothesis when available and otherwise falls back to a minimal
+seeded-random example runner: each ``@given`` test is executed
+``max_examples`` times with values drawn from deterministic per-example
+RNGs, so failures are reproducible and the suite collects everywhere.
+
+Only the strategy surface the suite actually uses is shimmed:
+``st.integers(lo, hi)``, ``st.floats(lo, hi)``, ``st.sampled_from(seq)``,
+``st.booleans()``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+    import functools
+    import inspect
+    import random
+
+    _DEFAULT_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _StModule:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            items = list(elements)
+            return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    st = _StModule()
+
+    def given(*strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                for example in range(n):
+                    rng = random.Random(0xC0FFEE + 7919 * example)
+                    drawn = tuple(s.draw(rng) for s in strats)
+                    try:
+                        fn(*args, *drawn, **kwargs)
+                    except Exception as e:  # pragma: no cover - reporting
+                        raise AssertionError(
+                            f"seeded example #{example} failed with drawn "
+                            f"arguments {drawn!r}: {e}") from e
+            wrapper._hyp_fallback = True
+            # hide the drawn parameters from pytest's fixture resolution
+            # (functools.wraps copies __wrapped__, which pytest follows)
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+        return deco
+
+    def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

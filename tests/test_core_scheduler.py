@@ -3,7 +3,7 @@ three-step scheduler invariants)."""
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import (AssignmentProblem, DataPlacementService, FileSpec,
                         NodeState, TaskSpec, abstract_ranks,

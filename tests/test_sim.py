@@ -3,7 +3,7 @@ failure injection, elastic join, conservation, scheduler invariants."""
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import WowScheduler
 from repro.sim import (DeadlockError, FlowManager, SimConfig, Simulation,
