@@ -4,7 +4,8 @@ Environment-free -- the discrete-event simulator (`repro.sim`) and the JAX
 runtime adapter (`repro.runtime`) both drive these classes.
 """
 from .dps import DataPlacementService
-from .ilp import AssignmentProblem, solve, solve_exact, solve_greedy
+from .ilp import (AssignmentProblem, IncrementalAssignmentSolver, decompose,
+                  solve, solve_exact, solve_greedy, solve_monolithic)
 from .priority import abstract_ranks, assign_priorities, priority_value
 from .reference import ReferenceWowScheduler
 from .scheduler import WowScheduler
@@ -13,8 +14,9 @@ from .types import (Action, CopPlan, DFS_LOC, FileSpec, NodeState, StartCop,
 
 __all__ = [
     "Action", "AssignmentProblem", "CopPlan", "DFS_LOC",
-    "DataPlacementService", "FileSpec", "NodeState", "ReferenceWowScheduler",
-    "StartCop", "StartTask", "TaskSpec", "Transfer", "WowScheduler",
-    "abstract_ranks", "assign_priorities", "priority_value", "solve",
-    "solve_exact", "solve_greedy",
+    "DataPlacementService", "FileSpec", "IncrementalAssignmentSolver",
+    "NodeState", "ReferenceWowScheduler", "StartCop", "StartTask", "TaskSpec",
+    "Transfer", "WowScheduler", "abstract_ranks", "assign_priorities",
+    "decompose", "priority_value", "solve", "solve_exact", "solve_greedy",
+    "solve_monolithic",
 ]

@@ -51,6 +51,10 @@ W_MAXLOAD = 0.5
 
 _EMPTY: frozenset = frozenset()
 
+# sentinel: plan_cop computes cop_feasible_targets itself unless the caller
+# hands over a precomputed constraint (None is a valid value: unconstrained)
+_UNCHECKED = object()
+
 
 class DataPlacementService:
     def __init__(self, seed: int = 0) -> None:
@@ -204,6 +208,12 @@ class DataPlacementService:
         # copy: handing out the live index would let callers corrupt it
         return set(self._node_prep_tasks.get(node, _EMPTY))
 
+    def iter_tasks_prepared_on(self, node: NodeId):
+        """Non-copying iteration over the tasks fully prepared on ``node``
+        (hot-path variant of :meth:`tasks_prepared_on`; callers must not
+        mutate the DPS while iterating)."""
+        return iter(self._node_prep_tasks.get(node, _EMPTY))
+
     # ------------------------------------------------------------------ files
     def register_file(self, f: FileSpec, location: NodeId) -> None:
         """Called when a task finishes and its output stays on the producing
@@ -319,19 +329,72 @@ class DataPlacementService:
     missing_bytes_reference = missing_bytes
 
     # ------------------------------------------------------------------- COPs
+    def cop_feasible_targets(
+        self,
+        input_ids: tuple[int, ...],
+        allowed_sources: set[NodeId] | None = None,
+    ) -> set[NodeId] | None:
+        """Prune the COP target search space for a given source restriction.
+
+        Returns ``None`` when every input has at least one admissible source
+        (no target constraint), otherwise the only nodes a feasible COP
+        could target: nodes already holding *every* source-less input (a
+        missing input with no admissible replica makes any other target
+        infeasible).  ``allowed_sources=None`` means any replica is
+        admissible, like in :meth:`plan_cop`.
+
+        This is the single definition of COP source admissibility:
+        ``plan_cop(task, inputs, n, allowed)`` returns a plan iff ``n`` is
+        unconstrained here (a source that *is* the target cannot help,
+        because then the file is not missing on the target).  Infeasible
+        ``plan_cop`` calls are therefore side-effect-free and callers may
+        skip them wholesale -- steps 2-3 use this to probe a handful of
+        nodes instead of every free-slot node.
+        """
+        constraint: set[NodeId] | None = None
+        for f in set(input_ids):
+            srcs = self._locations.get(f, _EMPTY)
+            if allowed_sources is None:
+                if srcs:
+                    continue
+            elif any(s in allowed_sources for s in srcs):
+                continue
+            constraint = (set(srcs) if constraint is None
+                          else constraint & srcs)
+            if not constraint:
+                return constraint            # empty: no feasible target
+        return constraint
+
     def plan_cop(
         self,
         task_id: int,
         input_ids: tuple[int, ...],
         target: NodeId,
         allowed_sources: set[NodeId] | None = None,
+        feasible_targets: set[NodeId] | None | object = _UNCHECKED,
     ) -> CopPlan | None:
         """Greedy COP construction for preparing ``task_id`` on ``target``.
 
         ``allowed_sources`` restricts source nodes (the scheduler passes the
         set of nodes with spare COP slots so c_node holds for sources too).
         Returns None when some missing file has no admissible replica.
+
+        Infeasible requests are rejected *before* any transfer is built
+        (via :meth:`cop_feasible_targets`, the one definition of source
+        admissibility), so they consume neither a COP id nor tie-break
+        randomness.  Steps 2-3 probe far more (task, target) pairs than
+        they start COPs -- at 1024 nodes the probes dominate the whole
+        scheduler iteration -- and this early exit makes a failed probe a
+        few set lookups.  Callers that already computed the constraint for
+        this (inputs, allowed_sources) pair can pass it as
+        ``feasible_targets`` to skip the recomputation.  (Both scheduler
+        implementations share this method, so their RNG streams stay
+        identical and equivalence is preserved.)
         """
+        feas = (self.cop_feasible_targets(input_ids, allowed_sources)
+                if feasible_targets is _UNCHECKED else feasible_targets)
+        if feas is not None and target not in feas:
+            return None
         missing = sorted(self.missing_files(input_ids, target),
                          key=lambda f: (-f.size, f.id))
         transfers: list[Transfer] = []

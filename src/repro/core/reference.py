@@ -9,12 +9,20 @@ it with dirty-set bookkeeping -- but the *decisions* of the two must be
 identical, and the equivalence tests (tests/test_incremental.py) prove it by
 running both against the same workloads.
 
-Do not "fix" or optimise this module; it is frozen on purpose.
+Do not "fix" or optimise this module; it is frozen on purpose.  (It is
+frozen at the *decision logic* level: it shares the live DPS/ILP
+infrastructure, so shared-layer changes -- e.g. `plan_cop` no longer
+consuming tie-break randomness on infeasible probes -- can shift absolute
+traces versus runs recorded under older versions, while new-vs-reference
+equivalence within a version is what the tests guarantee.)
 """
 from __future__ import annotations
 
 from .dps import DataPlacementService
-from .ilp import AssignmentProblem, solve
+# `solve` was renamed when core/ilp.py grew the decomposed/incremental
+# tiers; `solve_monolithic` is the identical pre-refactor implementation,
+# so this module's behaviour is unchanged.
+from .ilp import AssignmentProblem, solve_monolithic as solve
 from .types import (Action, CopPlan, NodeState, StartCop, StartTask, TaskSpec)
 
 

@@ -28,16 +28,24 @@ touched --
 
 ``schedule()`` expands dirty nodes to the tasks prepared on them (via the
 DPS reverse index), refreshes the cached start candidates for exactly the
-dirty tasks, and hands the ILP the (usually small) startable subproblem.
+dirty tasks, and hands both dirty sets to the incremental step-1 solver
+(`core.ilp.IncrementalAssignmentSolver`), which re-solves only the
+connected components of the task/prepared-node graph the dirty sets touch.
 Steps 2-3 iterate the free-COP-slot set rather than all nodes and exit as
 soon as no COP slot remains.  Decisions are bit-identical to
 ``core.reference.ReferenceWowScheduler`` (equivalence-tested) under the
-standing repo convention that node ids are enumerated in ascending order.
+standing repo convention that node ids are enumerated in ascending order,
+with one deliberate, documented exception: where the reference's
+monolithic solver falls back to greedy (instances beyond its exact gate
+of > 24 tasks AND > 64 candidate slots, or a B&B that exhausts its node
+budget on the product search tree) the incremental solver still solves
+small *components* exactly, so it may pick a different (never worse)
+tie-equivalent optimum -- see DESIGN.md "Step-1 solver".
 """
 from __future__ import annotations
 
 from .dps import DataPlacementService
-from .ilp import AssignmentProblem, solve
+from .ilp import IncrementalAssignmentSolver
 from .types import (Action, CopPlan, NodeState, StartCop, StartTask, TaskSpec)
 
 
@@ -73,6 +81,9 @@ class WowScheduler:
         self._startable: dict[int, list[int]] = {} # cached prep ∩ fits, != []
         self._free_slot_nodes: set[int] = {
             n for n, s in nodes.items() if s.active_cops < c_node}
+        # step-1 solver state lives for the scheduler's lifetime; dirty
+        # components are re-solved per event, the rest are reused
+        self._solver = IncrementalAssignmentSolver(nodes)
 
     # ------------------------------------------------------------- events
     def submit(self, task: TaskSpec) -> None:
@@ -134,14 +145,23 @@ class WowScheduler:
         self._step3_speculative_prepare(actions)
         return actions
 
-    def _refresh_candidates(self) -> None:
-        """Recompute cached start candidates for exactly the dirty tasks."""
+    @property
+    def solver_stats(self) -> dict:
+        """Counters/timings of the incremental step-1 solver (benchmarks)."""
+        return self._solver.stats
+
+    def _refresh_candidates(self) -> tuple[set[int], set[int]]:
+        """Recompute cached start candidates for exactly the dirty tasks.
+
+        Returns the expanded (dirty tasks, dirty nodes) pair, consumed by
+        the incremental solver to decide which components to re-solve."""
         dirty = self._dirty_tasks
         dirty |= self.dps.drain_dirty_tasks()
-        for n in self._dirty_nodes:
+        dirty_nodes = self._dirty_nodes
+        for n in dirty_nodes:
             if n in self.nodes:
-                dirty |= self.dps.tasks_prepared_on(n)
-        self._dirty_nodes.clear()
+                dirty.update(self.dps.iter_tasks_prepared_on(n))
+        self._dirty_nodes = set()
         self._dirty_tasks = set()
         # input-less tasks are prepared everywhere: any node change matters
         dirty |= self._no_input_ready
@@ -162,16 +182,16 @@ class WowScheduler:
                 self._startable[tid] = cands
             else:
                 self._startable.pop(tid, None)
+        return dirty, dirty_nodes
 
-    # Step 1: assign ready tasks to prepared nodes via the ILP.
+    # Step 1: assign ready tasks to prepared nodes via the incremental ILP.
     def _step1_start_prepared(self, actions: list[Action]) -> set[int]:
-        self._refresh_candidates()
-        if not self._startable:
-            return set()
-        order = sorted(self._startable, key=self._submit_seq.__getitem__)
-        tasks = [self.ready[tid] for tid in order]
-        candidates = {tid: self._startable[tid] for tid in order}
-        assign = solve(AssignmentProblem(tasks, candidates, self.nodes))
+        dirty_tasks, dirty_nodes = self._refresh_candidates()
+        # the solver must see every event's dirty sets (even when nothing is
+        # currently startable) so its component structure stays in sync
+        assign = self._solver.solve_event(
+            self.ready, self._startable, self._submit_seq,
+            dirty_tasks, dirty_nodes)
         started: set[int] = set()
         for tid, n in sorted(assign.items()):
             t = self.ready.pop(tid)
@@ -195,6 +215,19 @@ class WowScheduler:
 
     def _cop_slots_free(self, node_id: int) -> bool:
         return self.nodes[node_id].active_cops < self.c_node
+
+    def _cop_target_pool(self, t: TaskSpec):
+        """(feasibility constraint, candidate-target pool) for preparing
+        ``t`` under the current free-COP-slot set.  Pool is None when no
+        target can be feasible.  Skipping pruned targets cannot change
+        decisions: infeasible plan_cop probes are side-effect-free (see
+        dps.cop_feasible_targets)."""
+        feas = self.dps.cop_feasible_targets(t.inputs, self._free_slot_nodes)
+        if feas is None:
+            return None, self._free_slot_nodes
+        if feas:
+            return feas, feas & self._free_slot_nodes
+        return feas, None
 
     def _task_cop_budget(self, task_id: int) -> bool:
         return self.cops_per_task.get(task_id, 0) < self.c_task
@@ -233,10 +266,13 @@ class WowScheduler:
                 break               # no COP can start or source anywhere
             if not self._task_cop_budget(t.id):
                 continue
+            feas, pool = self._cop_target_pool(t)
+            if pool is None:
+                continue
             # nodes with free compute capacity, spare COP slot, not already
             # prepared / being prepared
             cands = [
-                n for n in self._free_slot_nodes
+                n for n in pool
                 if self.nodes[n].fits(t)
                 and (t.id, n) not in self.inflight_targets
                 and not dps.is_prepared_task(t.id, n)
@@ -246,7 +282,8 @@ class WowScheduler:
             # earliest start ~ fewest missing bytes (paper §IV-C)
             cands.sort(key=lambda n: (dps.missing_bytes_task(t.id, n), n))
             for n in cands:
-                plan = dps.plan_cop(t.id, t.inputs, n, self._free_slot_nodes)
+                plan = dps.plan_cop(t.id, t.inputs, n, self._free_slot_nodes,
+                                    feasible_targets=feas)
                 if plan is not None:
                     self._start_cop(plan, actions)
                     break
@@ -262,8 +299,11 @@ class WowScheduler:
         for t in sorted(todo, key=lambda t: (-t.priority, t.id)):
             if not self._free_slot_nodes:
                 break
+            feas, pool = self._cop_target_pool(t)
+            if pool is None:
+                continue
             cands = sorted(
-                n for n in self._free_slot_nodes
+                n for n in pool
                 if (t.id, n) not in self.inflight_targets
                 and not dps.is_prepared_task(t.id, n)
                 and t.mem <= self.nodes[n].mem        # could ever run here
@@ -272,7 +312,8 @@ class WowScheduler:
                 continue
             best: CopPlan | None = None
             for n in cands:
-                plan = dps.plan_cop(t.id, t.inputs, n, self._free_slot_nodes)
+                plan = dps.plan_cop(t.id, t.inputs, n, self._free_slot_nodes,
+                                    feasible_targets=feas)
                 if plan is not None and (best is None or plan.price < best.price):
                     best = plan
             if best is not None:

@@ -38,6 +38,14 @@ LinkId = tuple[str, int]
 # < 1 byte left => complete (sub-byte remainders are float dust, not data)
 _DUST = 0.5
 
+# ETA-heap compaction thresholds: rebuild a heap once it holds more than
+# _COMPACT_FACTOR entries per live flow (and is past the _COMPACT_MIN floor
+# where compaction cost would exceed the garbage).  Stale entries otherwise
+# accumulate until popped -- long-lived flows rescheduled many times (rate
+# epoch bumps) can grow the heaps without bound in very long simulations.
+_COMPACT_MIN = 64
+_COMPACT_FACTOR = 4
+
 
 @dataclasses.dataclass
 class Flow:
@@ -116,6 +124,7 @@ class FlowManager:
         # flow is removed or its epoch moved on -- skipped on pop.
         self._completions: list[tuple[float, int, int]] = []  # half-byte ETA
         self._horizon: list[tuple[float, int, int]] = []      # full ETA
+        self.compactions = 0                        # heap rebuilds (metrics)
 
     # ------------------------------------------------------------------ API
     def add(self, links: tuple[LinkId, ...], nbytes: float,
@@ -175,6 +184,24 @@ class FlowManager:
         # rate == 0: no ETA; the flow re-enters a heap when its component
         # is recomputed with capacity to give
 
+    def _maybe_compact(self) -> None:
+        """Drop stale heap entries once they outnumber live flows 4:1.
+
+        An entry is live when its flow still exists *and* carries the
+        entry's rate epoch; every flow has at most one live entry per heap,
+        so a compacted heap is bounded by the active-flow count.  Amortised
+        O(1): a rebuild is linear but removes >= 3/4 of the entries."""
+        n_live = len(self.flows)
+        for attr in ("_completions", "_horizon"):
+            heap = getattr(self, attr)
+            if len(heap) > _COMPACT_MIN and len(heap) > _COMPACT_FACTOR * n_live:
+                fresh = [e for e in heap
+                         if (f := self.flows.get(e[1])) is not None
+                         and f.epoch == e[2]]
+                heapq.heapify(fresh)
+                setattr(self, attr, fresh)
+                self.compactions += 1
+
     def recompute(self) -> None:
         """Progressive filling over the dirty connected component only."""
         if not self._dirty_links:
@@ -193,6 +220,7 @@ class FlowManager:
         for f in comp:
             f.epoch += 1
             self._push(f)
+        self._maybe_compact()
 
     def next_completion(self) -> tuple[float, Flow | None]:
         """(dt, flow) of the earliest finishing flow at current rates."""
