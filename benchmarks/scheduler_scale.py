@@ -11,16 +11,30 @@ retained ``ReferenceWowScheduler``:
                 submission per iteration), which is what the per-event hot
                 loop of a dynamic engine actually looks like.
 
-Each measurement also records the **solver phase** -- time spent inside the
-step-1 assignment solver -- separately: ``solver_ms_per_iter`` /
-``cold_solver_ms`` per row, plus the solver's own counters for the indexed
-implementation (components rebuilt vs reused, fingerprint-cache hits, exact
-vs greedy solves).  The incremental scheduler reports its
-``solver_stats["solve_s"]`` clock; the frozen reference scheduler is
-measured by temporarily wrapping ``core.reference``'s ``solve`` symbol.
+Each measurement separates two phases: the **step-1 solver**
+(``solver_ms_per_iter`` / ``cold_solver_ms``, plus the indexed solver's own
+counters) and **steps 2-3** (``step23_ms_per_iter`` -- the COP-placement /
+speculative-ordering share this PR's indexed ready set targets).  The
+incremental scheduler reports its own ``phase_s`` clocks; the frozen
+reference scheduler is measured by temporarily wrapping its ``solve``
+symbol and step-2/3 methods.
+
+Two further scenarios cover this PR's other step-1 paths:
+
+* ``run_inputless`` -- a sustained backlog of *input-less* tasks (a
+  workflow fan-out phase).  The indexed scheduler routes these through the
+  capacity-only fast path (no DPS, no component machinery); the reference
+  rebuilds every candidate list per event.  Headline keys
+  ``inputless_ms_per_iter_{indexed,reference}`` / ``inputless_speedup``.
+* ``run_warmstart`` -- the declined-placement path: a synthetic resource
+  manager rejects every step-1 assignment, so tasks stay pending and (with
+  ``strict_parity=False``, benchmark-harness only -- the scheduler default
+  is unchanged) the previous assignment seeds the B&B incumbent.  Records
+  strict-vs-warm ms/event and asserts objective safety (warm never worse;
+  equal whenever the B&B stays inside its node budget).
 
 Results land in BENCH_scheduler_scale.json; headline numbers are the
-sustained speedup and the solver-phase times on the (1024 nodes, 4096 ready
+sustained speedup and the phase times on the (1024 nodes, 4096 ready
 tasks) row.
 """
 from __future__ import annotations
@@ -30,8 +44,10 @@ import random
 import time
 
 import repro.core.reference as _reference
-from repro.core import (DataPlacementService, FileSpec, NodeState,
+from repro.core import (DataPlacementService, FileSpec,
+                        IncrementalAssignmentSolver, NodeState,
                         ReferenceWowScheduler, TaskSpec, WowScheduler)
+from repro.core.ilp import AssignmentProblem, objective
 
 from .common import emit, write_json
 
@@ -66,46 +82,93 @@ def _timed_reference_solver():
         _reference.solve = orig
 
 
+@contextlib.contextmanager
+def _timed_reference_steps23():
+    """Accumulate wall time in the reference scheduler's steps 2-3 by
+    wrapping the (frozen) class methods for the duration."""
+    acc = {"s": 0.0}
+    orig2 = ReferenceWowScheduler._step2_prepare_for_free_compute
+    orig3 = ReferenceWowScheduler._step3_speculative_prepare
+
+    def timed2(self, actions, started):
+        t0 = time.perf_counter()
+        try:
+            return orig2(self, actions, started)
+        finally:
+            acc["s"] += time.perf_counter() - t0
+
+    def timed3(self, actions):
+        t0 = time.perf_counter()
+        try:
+            return orig3(self, actions)
+        finally:
+            acc["s"] += time.perf_counter() - t0
+
+    ReferenceWowScheduler._step2_prepare_for_free_compute = timed2
+    ReferenceWowScheduler._step3_speculative_prepare = timed3
+    try:
+        yield acc
+    finally:
+        ReferenceWowScheduler._step2_prepare_for_free_compute = orig2
+        ReferenceWowScheduler._step3_speculative_prepare = orig3
+
+
 def _solver_seconds(sched, acc) -> float:
     if isinstance(sched, WowScheduler):
         return sched.solver_stats["solve_s"]
     return acc["s"]
 
 
-def build(n_nodes: int, n_ready: int, cls, seed: int = 0):
+def _step23_seconds(sched, acc23) -> float:
+    if isinstance(sched, WowScheduler):
+        return sched.phase_s["step23_s"]
+    return acc23["s"]
+
+
+def build(n_nodes: int, n_ready: int, cls, seed: int = 0,
+          inputless: bool = False):
     rng = random.Random(seed)
     nodes = {i: NodeState(i, 128 * GiB, 16.0) for i in range(n_nodes)}
     dps = DataPlacementService(seed=seed)
     sched = cls(nodes, dps)
     for t in range(n_ready):
-        fid = t
-        host = rng.randrange(n_nodes)
-        dps.register_file(FileSpec(id=fid, size=rng.randint(1, 4) * GiB,
-                                   producer=-1), host)
+        if inputless:
+            inputs: tuple[int, ...] = ()
+        else:
+            fid = t
+            host = rng.randrange(n_nodes)
+            dps.register_file(FileSpec(id=fid, size=rng.randint(1, 4) * GiB,
+                                       producer=-1), host)
+            inputs = (fid,)
         task = TaskSpec(id=t, abstract="a", mem=TASK_MEM, cores=TASK_CORES,
-                        inputs=(fid,), priority=rng.uniform(1, 10))
+                        inputs=inputs, priority=rng.uniform(1, 10))
         sched.submit(task)
     return sched, dps, rng
 
 
-def drive_event(sched, dps, rng, n_nodes: int, next_id: int) -> list:
+def drive_event(sched, dps, rng, n_nodes: int, next_id: int,
+                inputless: bool = False) -> list:
     """One sustained event round: finish a task, finish a COP, submit a
-    fresh single-input task (id == file id == ``next_id``) whose input file
-    lands on a random node, then schedule().  Returns the actions of that
-    schedule().  The single definition of the event protocol -- used by
-    the sustained measurement and the equivalence sanity check, so both
-    exercise the same workload."""
+    fresh task (single-input whose file lands on a random node, or
+    input-less in the fan-out scenario), then schedule().  Returns the
+    actions of that schedule().  The single definition of the event
+    protocol -- used by the sustained measurements and the equivalence
+    sanity check, so both exercise the same workload."""
     if sched.running:
         tid = next(iter(sched.running))
         sched.on_task_finished(tid, sched.running[tid])
     if sched.active_cops:
         cid = next(iter(sched.active_cops))
         sched.on_cop_finished(sched.active_cops[cid], ok=True)
-    host = rng.randrange(n_nodes)
-    dps.register_file(FileSpec(id=next_id, size=rng.randint(1, 4) * GiB,
-                               producer=-1), host)
+    if inputless:
+        inputs: tuple[int, ...] = ()
+    else:
+        host = rng.randrange(n_nodes)
+        dps.register_file(FileSpec(id=next_id, size=rng.randint(1, 4) * GiB,
+                                   producer=-1), host)
+        inputs = (next_id,)
     sched.submit(TaskSpec(id=next_id, abstract="a", mem=TASK_MEM,
-                          cores=TASK_CORES, inputs=(next_id,),
+                          cores=TASK_CORES, inputs=inputs,
                           priority=rng.uniform(1, 10)))
     return sched.schedule()
 
@@ -121,38 +184,111 @@ def run_cold(n_nodes: int, n_ready: int, cls, seed: int = 0):
 
 
 def run_sustained(n_nodes: int, n_ready: int, cls, iters: int,
-                  seed: int = 0):
+                  seed: int = 0, inputless: bool = False) -> dict:
     """Warm scheduler, then `iters` event rounds: finish one task, finish
-    one COP, submit one fresh task (with its input file landing on a random
-    node), schedule().  Returns (avg ms/iteration, avg solver ms/iteration,
-    actions/iteration, solver stats).
+    one COP, submit one fresh task, schedule().  Returns per-iteration
+    averages: ``ms``, ``solver_ms``, ``step23_ms``, ``actions``, plus the
+    indexed solver's counter deltas (``stats``).
 
     Warm-up is the initial cold schedule *plus one unmeasured event round*:
     the first event after a cold start is a one-off outlier for any
     incremental implementation (the cold reservations dirtied every node, so
     everything must be refreshed once), while the measurement target is the
     steady per-event cost of a long-running engine."""
-    sched, dps, rng = build(n_nodes, n_ready, cls, seed)
-    with _timed_reference_solver() as acc:
+    sched, dps, rng = build(n_nodes, n_ready, cls, seed, inputless=inputless)
+    with _timed_reference_solver() as acc, \
+            _timed_reference_steps23() as acc23:
         next_id = n_ready
         sched.schedule()                  # warm-up: initial placements/COPs
-        drive_event(sched, dps, rng, n_nodes, next_id)  # post-cold refresh
+        drive_event(sched, dps, rng, n_nodes, next_id,
+                    inputless=inputless)  # post-cold refresh
         next_id += 1
         solver_s0 = _solver_seconds(sched, acc)
+        step23_s0 = _step23_seconds(sched, acc23)
         stats0 = (dict(sched.solver_stats)
                   if isinstance(sched, WowScheduler) else None)
         actions = 0
         t0 = time.perf_counter()
         for _ in range(iters):
-            actions += len(drive_event(sched, dps, rng, n_nodes, next_id))
+            actions += len(drive_event(sched, dps, rng, n_nodes, next_id,
+                                       inputless=inputless))
             next_id += 1
         dt_ms = (time.perf_counter() - t0) * 1000
         solver_ms = (_solver_seconds(sched, acc) - solver_s0) * 1000
+        step23_ms = (_step23_seconds(sched, acc23) - step23_s0) * 1000
     # stats cover the measured window only (delta vs the warm-up snapshot),
     # matching the scope of solver_ms_per_iter
     stats = ({k: v - stats0[k] for k, v in sched.solver_stats.items()}
              if stats0 is not None else None)
-    return dt_ms / iters, solver_ms / iters, actions / iters, stats
+    return {"ms": dt_ms / iters, "solver_ms": solver_ms / iters,
+            "step23_ms": step23_ms / iters, "actions": actions / iters,
+            "stats": stats}
+
+
+def run_inputless(n_nodes: int, n_ready: int, cls, iters: int,
+                  seed: int = 0) -> dict:
+    """Sustained fan-out phase: the whole backlog is input-less tasks, so
+    every step-1 decision is pure capacity placement."""
+    return run_sustained(n_nodes, n_ready, cls, iters, seed, inputless=True)
+
+
+# ------------------------------------------------- warm-start (declined RM)
+def run_warmstart(n_nodes: int = 6, n_tasks: int = 10, iters: int = 60,
+                  seed: int = 0) -> dict:
+    """Measure the ``strict_parity=False`` B&B warm start on the
+    declined-placement path, harness-side only (the scheduler keeps strict
+    mode for reference bit-parity).
+
+    Synthetic resource-manager-rejection stream: every event the caller
+    declines the solver's whole assignment (tasks stay in the candidate
+    set and are re-marked dirty, per the solve_event contract) and one
+    node's free cores drift slightly, so the component fingerprint misses
+    the cache and the B&B really re-runs -- seeded by the surviving
+    previous assignment in warm mode.  Returns ms/event for both modes
+    and the warm-seed count, and verifies the warm objective never falls
+    below the strict one (they are equal while the B&B stays inside its
+    node budget; a budget abort may let the seed win)."""
+    results: dict[str, float] = {}
+    warm_seeds = 0
+    objectives: dict[str, list[float]] = {}
+    for mode, strict in (("strict", True), ("warm", False)):
+        rng = random.Random(seed)
+        nodes = {i: NodeState(i, 128 * GiB, 16.0) for i in range(n_nodes)}
+        solver = IncrementalAssignmentSolver(nodes, strict_parity=strict)
+        tasks: dict[int, TaskSpec] = {}
+        cands: dict[int, list[int]] = {}
+        seq: dict[int, int] = {}
+        for t in range(n_tasks):
+            tasks[t] = TaskSpec(id=t, abstract="a", mem=TASK_MEM,
+                                cores=TASK_CORES, inputs=(t,),
+                                priority=rng.uniform(1, 10))
+            cands[t] = sorted(rng.sample(range(n_nodes), 2))
+            seq[t] = t
+        dirty = set(tasks)
+        objs: list[float] = []
+        t0 = time.perf_counter()
+        for i in range(iters):
+            drift = i % n_nodes
+            nodes[drift].free_cores = 16.0 - 1e-9 * (i + 1)
+            assign = solver.solve_event(tasks, cands, seq, dirty, {drift})
+            objs.append(objective(
+                AssignmentProblem(list(tasks.values()), cands, nodes),
+                assign))
+            # the RM rejects everything: re-mark the declined tasks dirty
+            dirty = set(assign)
+        results[f"{mode}_ms_per_event"] = (
+            (time.perf_counter() - t0) * 1000 / iters)
+        objectives[mode] = objs
+        if not strict:
+            warm_seeds = int(solver.stats["warm_seeds"])
+    # objective safety: seeding may only match or improve the objective
+    # (it matches exactly whenever the B&B stays inside its node budget)
+    assert all(w >= s - 1e-9 for s, w in zip(objectives["strict"],
+                                             objectives["warm"])), (
+        "warm start regressed the step-1 objective")
+    results["warm_seeds"] = warm_seeds
+    results["objective_safe"] = True
+    return results
 
 
 def _summarize(action_list):
@@ -167,21 +303,26 @@ def _summarize(action_list):
 
 
 def sanity_check_equivalence(n_nodes: int = 32, n_ready: int = 256,
-                             sustained_iters: int = 8) -> None:
+                             sustained_iters: int = 8,
+                             inputless: bool = False) -> None:
     """Cheap guard: both implementations must make identical decisions on
     the benchmark workload, cold *and* across a stream of dirty events (the
     full proof lives in the test suite)."""
-    s_new, dps_new, rng_new = build(n_nodes, n_ready, WowScheduler)
-    s_ref, dps_ref, rng_ref = build(n_nodes, n_ready, ReferenceWowScheduler)
+    s_new, dps_new, rng_new = build(n_nodes, n_ready, WowScheduler,
+                                    inputless=inputless)
+    s_ref, dps_ref, rng_ref = build(n_nodes, n_ready, ReferenceWowScheduler,
+                                    inputless=inputless)
     a_new = _summarize(s_new.schedule())
     a_ref = _summarize(s_ref.schedule())
     assert a_new == a_ref, "incremental scheduler diverged from reference"
     next_id = n_ready
     for _ in range(sustained_iters):
         a_new = _summarize(drive_event(s_new, dps_new, rng_new,
-                                       n_nodes, next_id))
+                                       n_nodes, next_id,
+                                       inputless=inputless))
         a_ref = _summarize(drive_event(s_ref, dps_ref, rng_ref,
-                                       n_nodes, next_id))
+                                       n_nodes, next_id,
+                                       inputless=inputless))
         assert a_new == a_ref, ("incremental scheduler diverged from "
                                 "reference under sustained events")
         next_id += 1
@@ -189,9 +330,11 @@ def sanity_check_equivalence(n_nodes: int = 32, n_ready: int = 256,
 
 def main() -> list[dict]:
     sanity_check_equivalence()
+    sanity_check_equivalence(inputless=True)
     rows = []
     emit("scheduler_scale,impl,n_nodes,n_ready_tasks,cold_ms,cold_solver_ms,"
-         "sustained_ms_per_iter,solver_ms_per_iter,actions_per_iter")
+         "sustained_ms_per_iter,solver_ms_per_iter,step23_ms_per_iter,"
+         "actions_per_iter")
     impls = {"indexed": WowScheduler, "reference": ReferenceWowScheduler}
     headline_stats = None
     for n_nodes, n_ready in SIZES:
@@ -200,29 +343,63 @@ def main() -> list[dict]:
         for name, cls in impls.items():
             cold_ms, cold_solver_ms, _cold_actions = run_cold(
                 n_nodes, n_ready, cls)
-            sus_ms, sus_solver_ms, sus_actions, stats = run_sustained(
-                n_nodes, n_ready, cls, iters)
+            sus = run_sustained(n_nodes, n_ready, cls, iters)
             if name == "indexed" and (n_nodes, n_ready) == HEADLINE:
-                headline_stats = stats
+                headline_stats = sus["stats"]
             rows.append({"impl": name, "nodes": n_nodes, "tasks": n_ready,
                          "cold_ms": cold_ms,
                          "cold_solver_ms": cold_solver_ms,
-                         "sustained_ms": sus_ms,
-                         "solver_ms_per_iter": sus_solver_ms,
-                         "iters": iters, "actions_per_iter": sus_actions})
+                         "sustained_ms": sus["ms"],
+                         "solver_ms_per_iter": sus["solver_ms"],
+                         "step23_ms_per_iter": sus["step23_ms"],
+                         "iters": iters, "actions_per_iter": sus["actions"]})
             emit(f"scheduler_scale,{name},{n_nodes},{n_ready},"
-                 f"{cold_ms:.1f},{cold_solver_ms:.2f},{sus_ms:.2f},"
-                 f"{sus_solver_ms:.3f},{sus_actions:.1f}")
+                 f"{cold_ms:.1f},{cold_solver_ms:.2f},{sus['ms']:.2f},"
+                 f"{sus['solver_ms']:.3f},{sus['step23_ms']:.3f},"
+                 f"{sus['actions']:.1f}")
     by_key = {(r["impl"], r["nodes"], r["tasks"]): r for r in rows}
     ref = by_key[("reference", *HEADLINE)]
     new = by_key[("indexed", *HEADLINE)]
     speedup = ref["sustained_ms"] / max(new["sustained_ms"], 1e-9)
     solver_speedup = (ref["solver_ms_per_iter"]
                       / max(new["solver_ms_per_iter"], 1e-9))
+    step23_speedup = (ref["step23_ms_per_iter"]
+                      / max(new["step23_ms_per_iter"], 1e-9))
     emit(f"scheduler_scale,sustained_speedup_{HEADLINE[0]}n,"
          f"{speedup:.1f}x")
     emit(f"scheduler_scale,solver_speedup_{HEADLINE[0]}n,"
          f"{solver_speedup:.1f}x")
+    emit(f"scheduler_scale,step23_speedup_{HEADLINE[0]}n,"
+         f"{step23_speedup:.1f}x")
+
+    # fan-out phase: input-less backlog through the capacity-only path
+    less_iters = {"indexed": 6, "reference": 4}
+    less: dict[str, dict] = {}
+    for name, cls in impls.items():
+        less[name] = run_inputless(*HEADLINE, cls, less_iters[name])
+        rows.append({"impl": name, "nodes": HEADLINE[0], "tasks": HEADLINE[1],
+                     "scenario": "inputless",
+                     "sustained_ms": less[name]["ms"],
+                     "solver_ms_per_iter": less[name]["solver_ms"],
+                     "step23_ms_per_iter": less[name]["step23_ms"],
+                     "iters": less_iters[name],
+                     "actions_per_iter": less[name]["actions"]})
+        emit(f"scheduler_scale,inputless_{name},{HEADLINE[0]},{HEADLINE[1]},"
+             f",,{less[name]['ms']:.2f},{less[name]['solver_ms']:.3f},"
+             f"{less[name]['step23_ms']:.3f},{less[name]['actions']:.1f}")
+    inputless_speedup = (less["reference"]["ms"]
+                         / max(less["indexed"]["ms"], 1e-9))
+    emit(f"scheduler_scale,inputless_speedup_{HEADLINE[0]}n,"
+         f"{inputless_speedup:.1f}x")
+
+    # warm start on the declined-placement path (harness-only)
+    warm = run_warmstart()
+    rows.append({"impl": "incremental-solver", "scenario": "warmstart_declined",
+                 **{k: v for k, v in warm.items()}})
+    emit(f"scheduler_scale,warmstart_declined,strict_ms,"
+         f"{warm['strict_ms_per_event']:.3f},warm_ms,"
+         f"{warm['warm_ms_per_event']:.3f},warm_seeds,{warm['warm_seeds']}")
+
     write_json("scheduler_scale", {
         "rows": rows,
         "headline": {"nodes": HEADLINE[0], "tasks": HEADLINE[1],
@@ -232,6 +409,13 @@ def main() -> list[dict]:
                      "sustained_solver_ms_reference": ref["solver_ms_per_iter"],
                      "sustained_solver_ms_indexed": new["solver_ms_per_iter"],
                      "solver_speedup": solver_speedup,
+                     "step23_ms_reference": ref["step23_ms_per_iter"],
+                     "step23_ms_indexed": new["step23_ms_per_iter"],
+                     "step23_speedup": step23_speedup,
+                     "inputless_ms_per_iter_reference": less["reference"]["ms"],
+                     "inputless_ms_per_iter_indexed": less["indexed"]["ms"],
+                     "inputless_speedup": inputless_speedup,
+                     "warmstart": warm,
                      "solver_stats": headline_stats},
     })
     return rows

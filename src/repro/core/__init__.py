@@ -7,16 +7,17 @@ from .dps import DataPlacementService
 from .ilp import (AssignmentProblem, IncrementalAssignmentSolver, decompose,
                   solve, solve_exact, solve_greedy, solve_monolithic)
 from .priority import abstract_ranks, assign_priorities, priority_value
+from .readyset import CapacityClasses, NodeOrder, ReadySet
 from .reference import ReferenceWowScheduler
 from .scheduler import WowScheduler
 from .types import (Action, CopPlan, DFS_LOC, FileSpec, NodeState, StartCop,
                     StartTask, TaskSpec, Transfer)
 
 __all__ = [
-    "Action", "AssignmentProblem", "CopPlan", "DFS_LOC",
+    "Action", "AssignmentProblem", "CapacityClasses", "CopPlan", "DFS_LOC",
     "DataPlacementService", "FileSpec", "IncrementalAssignmentSolver",
-    "NodeState", "ReferenceWowScheduler", "StartCop", "StartTask", "TaskSpec",
-    "Transfer", "WowScheduler", "abstract_ranks", "assign_priorities",
-    "decompose", "priority_value", "solve", "solve_exact", "solve_greedy",
-    "solve_monolithic",
+    "NodeOrder", "NodeState", "ReadySet", "ReferenceWowScheduler",
+    "StartCop", "StartTask", "TaskSpec", "Transfer", "WowScheduler",
+    "abstract_ranks", "assign_priorities", "decompose", "priority_value",
+    "solve", "solve_exact", "solve_greedy", "solve_monolithic",
 ]

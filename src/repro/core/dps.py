@@ -34,6 +34,22 @@ mutation funnels through ``_idx_add`` / ``_idx_remove`` which keep all six
 indices consistent and record tasks whose prepared-node set changed in a
 dirty set the scheduler drains via :meth:`drain_dirty_tasks`.
 
+Source-feasibility index (DESIGN.md "Indexed ready set"): when the owning
+scheduler activates it via :meth:`sync_free_sources` and then mirrors every
+free-COP-slot transition through :meth:`note_source_freed` /
+:meth:`note_source_busy`, the DPS additionally maintains, per file, the
+number of replicas on free-slot nodes (``_free_rep``) and, per tracked
+task, the number of distinct inputs with *no* free-slot replica
+(``_unsourced``).  :meth:`cop_blocked` then answers "is a COP for this task
+provably infeasible right now?" in O(1): with any unsourced input the only
+feasible targets are free-slot nodes already holding *all* unsourced
+inputs (:meth:`cop_feasible_targets`) -- and a free-slot node holding one
+would have made it sourced, so no such target exists, every probe would
+fail, and steps 2-3 may skip the task without changing any decision.  Tasks whose blocked state may have flipped land in a dirty set
+drained via :meth:`drain_blocked_dirty`.  The index is inert (and free)
+until ``sync_free_sources`` is called; the reference scheduler never calls
+it.
+
 The original from-scratch queries (``is_prepared``, ``prepared_nodes``,
 ``missing_files``, ``missing_bytes``) are retained both as the generic API
 for untracked input tuples and as the reference implementations the
@@ -57,11 +73,15 @@ _UNCHECKED = object()
 
 
 class DataPlacementService:
-    def __init__(self, seed: int = 0) -> None:
+    def __init__(self, seed: int = 0, node_order=None) -> None:
         self._files: dict[int, FileSpec] = {}
         self._locations: dict[int, set[NodeId]] = {}
         self._rng = random.Random(seed)
         self._next_cop_id = 0
+        # canonical node enumeration order (core.readyset.NodeOrder) shared
+        # with the environment/scheduler; None falls back to ascending ids
+        # (the historical repo convention, still right for standalone use)
+        self._node_order = node_order
         # total bytes moved through COPs, for the Fig.4 overhead metric
         self.cop_bytes_total = 0
         # ----- reverse indices (see module docstring)
@@ -77,14 +97,40 @@ class DataPlacementService:
         self._prep: dict[int, set[NodeId]] = {}
         self._node_prep_tasks: dict[NodeId, set[int]] = {}
         self._dirty_tasks: set[int] = set()
+        # ----- source-feasibility index (inert until sync_free_sources)
+        self._src_active = False
+        self._free_src: set[NodeId] = set()            # free-COP-slot mirror
+        self._free_rep: dict[int, int] = {}            # file -> free replicas
+        self._unsourced: dict[int, int] = {}           # task -> sourceless inputs
+        self._blocked_dirty: set[int] = set()
 
     # ------------------------------------------------------- index plumbing
+    def _free_rep_up(self, file_id: int) -> None:
+        c = self._free_rep.get(file_id, 0) + 1
+        self._free_rep[file_id] = c
+        if c == 1:
+            for tid in self._waiting.get(file_id, _EMPTY):
+                self._unsourced[tid] -= 1
+                self._blocked_dirty.add(tid)
+
+    def _free_rep_down(self, file_id: int) -> None:
+        c = self._free_rep.get(file_id, 0) - 1
+        if c <= 0:
+            self._free_rep.pop(file_id, None)
+            for tid in self._waiting.get(file_id, _EMPTY):
+                self._unsourced[tid] += 1
+                self._blocked_dirty.add(tid)
+        else:
+            self._free_rep[file_id] = c
+
     def _idx_add(self, file_id: int, node: NodeId) -> None:
         locs = self._locations.setdefault(file_id, set())
         if node in locs:
             return
         locs.add(node)
         self._node_files.setdefault(node, set()).add(file_id)
+        if self._src_active and node in self._free_src:
+            self._free_rep_up(file_id)
         spec = self._files.get(file_id)
         size = spec.size if spec is not None else 0
         for tid in self._waiting.get(file_id, _EMPTY):
@@ -108,6 +154,8 @@ class DataPlacementService:
         held = self._node_files.get(node)
         if held is not None:
             held.discard(file_id)
+        if self._src_active and node in self._free_src:
+            self._free_rep_down(file_id)
         spec = self._files.get(file_id)
         size = spec.size if spec is not None else 0
         for tid in self._waiting.get(file_id, _EMPTY):
@@ -163,8 +211,14 @@ class DataPlacementService:
         for n in prep:
             self._node_prep_tasks.setdefault(n, set()).add(task_id)
         self._dirty_tasks.add(task_id)
+        if self._src_active:
+            self._unsourced[task_id] = sum(
+                1 for f in mult if self._free_rep.get(f, 0) == 0)
+            self._blocked_dirty.add(task_id)
 
     def untrack_task(self, task_id: int) -> None:
+        self._unsourced.pop(task_id, None)
+        self._blocked_dirty.discard(task_id)
         self._task_inputs.pop(task_id, ())
         for f in self._task_mult.pop(task_id, {}):
             waiting = self._waiting.get(f)
@@ -190,12 +244,70 @@ class DataPlacementService:
         self._dirty_tasks = set()
         return dirty
 
+    # ------------------------------------------- source-feasibility index
+    def sync_free_sources(self, free_nodes) -> None:
+        """Activate (or rebuild) the source-feasibility index against the
+        scheduler's current free-COP-slot set.  The owner must afterwards
+        mirror every slot transition via :meth:`note_source_freed` /
+        :meth:`note_source_busy`."""
+        self._src_active = True
+        self._free_src = set(free_nodes)
+        self._free_rep = {}
+        for f, locs in self._locations.items():
+            c = sum(1 for n in locs if n in self._free_src)
+            if c:
+                self._free_rep[f] = c
+        for tid, mult in self._task_mult.items():
+            self._unsourced[tid] = sum(
+                1 for f in mult if self._free_rep.get(f, 0) == 0)
+            self._blocked_dirty.add(tid)
+
+    def note_source_freed(self, node: NodeId) -> None:
+        """Node gained a free COP slot: its replicas became admissible."""
+        if not self._src_active or node in self._free_src:
+            return
+        self._free_src.add(node)
+        for f in self._node_files.get(node, _EMPTY):
+            self._free_rep_up(f)
+
+    def note_source_busy(self, node: NodeId) -> None:
+        """Node lost its last free COP slot (or left the cluster)."""
+        if not self._src_active or node not in self._free_src:
+            return
+        self._free_src.discard(node)
+        for f in self._node_files.get(node, _EMPTY):
+            self._free_rep_down(f)
+
+    def cop_blocked(self, task_id: int) -> bool:
+        """True iff every COP probe for the (tracked) task is provably
+        infeasible under the mirrored free-slot set: some input has no
+        replica on any free-slot node.  A feasible COP needs a free-slot
+        *target* already holding every such unsourced input
+        (:meth:`cop_feasible_targets`) -- but a free-slot node holding one
+        would have made it sourced, a contradiction, so the candidate pool
+        is empty whenever ``_unsourced > 0``.  With 0 every input is
+        sourceable and the task must be probed."""
+        return self._unsourced.get(task_id, 0) > 0
+
+    def drain_blocked_dirty(self) -> set[int]:
+        """Tracked tasks whose :meth:`cop_blocked` answer may have changed
+        since the last drain."""
+        dirty = self._blocked_dirty
+        self._blocked_dirty = set()
+        return dirty
+
     # ------------------------------------------------ indexed (fast) queries
     def is_prepared_task(self, task_id: int, node: NodeId) -> bool:
         return node in self._prep.get(task_id, _EMPTY)
 
     def prepared_nodes_task(self, task_id: int) -> list[NodeId]:
-        return sorted(self._prep.get(task_id, _EMPTY))
+        """Nodes where every input of the (tracked) task is present, in
+        canonical node order -- the order the reference scheduler's node
+        scans produce, so candidate lists built from this match it."""
+        prep = self._prep.get(task_id, _EMPTY)
+        if self._node_order is None:
+            return sorted(prep)
+        return self._node_order.sort(prep)
 
     def prep_count(self, task_id: int) -> int:
         return len(self._prep.get(task_id, _EMPTY))

@@ -376,11 +376,15 @@ class IncrementalAssignmentSolver:
     Contract with the scheduler (DESIGN.md "Step-1 solver"):
 
     * ``candidates`` passed to :meth:`solve_event` maps every currently
-      startable task to its (ascending) list of prepared nodes that fit it;
-      between events an entry may only change if the scheduler marked the
-      task dirty (the DPS dirties tasks on replica changes, dirty nodes are
-      expanded to the tasks prepared on them, input-less tasks are always
-      dirty).
+      startable task to its list of prepared nodes that fit it, in
+      canonical node order; between events an entry may only change if the
+      scheduler marked the task dirty (the DPS dirties tasks on replica
+      changes, dirty nodes are expanded to the tasks prepared on them).
+      Input-less tasks normally bypass this solver via the scheduler's
+      capacity-only fast path (DESIGN.md "Input-less fast path") and enter
+      ``candidates`` -- always accompanied by their ids in ``dirty_tasks``
+      -- only on mixed events where they must be solved jointly with
+      startable data-bound tasks.
     * ``dirty_nodes`` contains every node whose free resources changed
       since the previous event (task finished, step-1 reservation, elastic
       join).

@@ -33,11 +33,16 @@ class ReferenceWowScheduler:
         dps: DataPlacementService,
         c_node: int = 1,
         c_task: int = 2,
+        node_order=None,
     ) -> None:
         self.nodes = nodes
         self.dps = dps
         self.c_node = c_node
         self.c_task = c_task
+        # constructor-compat with WowScheduler: the canonical node order is
+        # *defined* as this scheduler's enumeration order (`list(self.nodes)`
+        # below), so the threaded object carries no extra information here
+        self.node_order = node_order
 
         self.ready: dict[int, TaskSpec] = {}
         self.running: dict[int, int] = {}          # task id -> node

@@ -31,21 +31,48 @@ DPS reverse index), refreshes the cached start candidates for exactly the
 dirty tasks, and hands both dirty sets to the incremental step-1 solver
 (`core.ilp.IncrementalAssignmentSolver`), which re-solves only the
 connected components of the task/prepared-node graph the dirty sets touch.
-Steps 2-3 iterate the free-COP-slot set rather than all nodes and exit as
-soon as no COP slot remains.  Decisions are bit-identical to
-``core.reference.ReferenceWowScheduler`` (equivalence-tested) under the
-standing repo convention that node ids are enumerated in ascending order,
-with one deliberate, documented exception: where the reference's
-monolithic solver falls back to greedy (instances beyond its exact gate
-of > 24 tasks AND > 64 candidate slots, or a B&B that exhausts its node
-budget on the product search tree) the incremental solver still solves
-small *components* exactly, so it may pick a different (never worse)
+
+Three further indexed structures (DESIGN.md "Indexed ready set") remove the
+remaining per-event O(backlog) scans:
+
+  * **Input-less fast path.**  Ready tasks with no intermediate inputs are
+    prepared everywhere -- pure capacity placement.  They never enter the
+    DPS or the incremental solver's component structure (which they used to
+    weld into one always-dirty component); their step-1 subproblem is built
+    from `readyset.CapacityClasses` (all fitting nodes per task *shape*)
+    and solved by the same stateless exact/greedy tiers (`ilp.solve`), so
+    decisions are unchanged.  On the rare event where input-less *and*
+    data-bound tasks are startable at once the two subproblems could
+    compete for capacity, and the scheduler falls back to one joint solve
+    -- bit-equal to the always-joint behaviour by construction.
+  * **Indexed steps 2-3.**  `readyset.ReadySet` keeps every data-bound
+    ready task pre-sorted under both step orders, updated in O(log R) as
+    DPS prepared-counts and per-task COP counts change; tasks whose COP is
+    provably infeasible under the current free-slot set (`dps.cop_blocked`)
+    are parked out of both orders, so steps 2-3 visit only tasks that could
+    actually start a COP -- no per-event sort, no backlog-wide probe loop.
+  * **Canonical node order.**  A `readyset.NodeOrder` owned by the
+    environment (or created here for standalone use) replaces every
+    ``sorted(self.nodes)`` and defines candidate/iteration order the same
+    way the reference's ``list(self.nodes)`` scans do, lifting the old
+    "node ids ascend" convention (nodes may re-join under old ids).
+
+Decisions are bit-identical to ``core.reference.ReferenceWowScheduler``
+(equivalence-tested), with one deliberate, documented exception: where the
+reference's monolithic solver falls back to greedy (instances beyond its
+exact gate of > 24 tasks AND > 64 candidate slots, or a B&B that exhausts
+its node budget on the product search tree) the incremental solver still
+solves small *components* exactly, so it may pick a different (never worse)
 tie-equivalent optimum -- see DESIGN.md "Step-1 solver".
 """
 from __future__ import annotations
 
+import time
+
 from .dps import DataPlacementService
-from .ilp import IncrementalAssignmentSolver
+from .ilp import AssignmentProblem, IncrementalAssignmentSolver
+from .ilp import solve as solve_stateless
+from .readyset import CapacityClasses, NodeOrder, ReadySet
 from .types import (Action, CopPlan, NodeState, StartCop, StartTask, TaskSpec)
 
 
@@ -56,11 +83,16 @@ class WowScheduler:
         dps: DataPlacementService,
         c_node: int = 1,
         c_task: int = 2,
+        node_order: NodeOrder | None = None,
     ) -> None:
         self.nodes = nodes
         self.dps = dps
         self.c_node = c_node
         self.c_task = c_task
+        # canonical node enumeration order; the environment passes its own
+        # (sim/engine.py owns one), standalone use derives it from the dict
+        self.node_order = node_order if node_order is not None \
+            else NodeOrder(nodes)
 
         self.ready: dict[int, TaskSpec] = {}
         self.running: dict[int, int] = {}          # task id -> node
@@ -71,6 +103,10 @@ class WowScheduler:
         # metrics hooks
         self.cops_created: int = 0
         self.tasks_started: int = 0
+        # per-phase wall time (benchmarks): step 1 overall, its input-less
+        # share, and steps 2-3 together
+        self.phase_s: dict[str, float] = {
+            "step1_s": 0.0, "inputless_s": 0.0, "step23_s": 0.0}
 
         # ----- incremental state (see module docstring)
         self._seq = 0
@@ -78,9 +114,13 @@ class WowScheduler:
         self._dirty_tasks: set[int] = set()
         self._dirty_nodes: set[int] = set()
         self._no_input_ready: set[int] = set()     # prepared everywhere
+        self._less_stale = True                    # input-less path dirty?
         self._startable: dict[int, list[int]] = {} # cached prep ∩ fits, != []
         self._free_slot_nodes: set[int] = {
             n for n, s in nodes.items() if s.active_cops < c_node}
+        self._capacity = CapacityClasses(nodes, self.node_order)
+        self._ready_index = ReadySet()
+        self.dps.sync_free_sources(self._free_slot_nodes)
         # step-1 solver state lives for the scheduler's lifetime; dirty
         # components are re-solved per event, the rest are reused
         self._solver = IncrementalAssignmentSolver(nodes)
@@ -92,9 +132,14 @@ class WowScheduler:
         self._submit_seq[task.id] = self._seq
         if task.inputs:
             self.dps.track_task(task.id, task.inputs)
+            self._dirty_tasks.add(task.id)
+            self._ready_index.add(
+                task.id, task.priority, self.dps.prep_count(task.id),
+                self.cops_per_task.get(task.id, 0),
+                blocked=self.dps.cop_blocked(task.id))
         else:
             self._no_input_ready.add(task.id)
-        self._dirty_tasks.add(task.id)
+            self._less_stale = True
 
     def on_task_finished(self, task_id: int, node: int) -> None:
         self.running.pop(task_id, None)
@@ -106,26 +151,44 @@ class WowScheduler:
 
     def on_cop_finished(self, plan: CopPlan, ok: bool = True) -> None:
         self.active_cops.pop(plan.id, None)
-        self.cops_per_task[plan.task_id] = max(
-            0, self.cops_per_task.get(plan.task_id, 0) - 1)
+        cops = max(0, self.cops_per_task.get(plan.task_id, 0) - 1)
+        self.cops_per_task[plan.task_id] = cops
+        self._ready_index.update_cops(plan.task_id, cops)
         for n in plan.nodes:
             state = self.nodes[n]
             state.active_cops = max(0, state.active_cops - 1)
             if state.active_cops < self.c_node:
-                self._free_slot_nodes.add(n)
+                self._slot_freed(n)
         self.inflight_targets.discard((plan.task_id, plan.target))
         if ok:
             self.dps.commit_cop(plan)   # marks consumer tasks dirty in DPS
 
     def note_node_added(self, node: int) -> None:
+        self.node_order.add(node)       # no-op when the environment owns it
         self._dirty_nodes.add(node)
+        self._less_stale = True
         if self.nodes[node].active_cops < self.c_node:
-            self._free_slot_nodes.add(node)
+            self._slot_freed(node)
 
     def note_node_removed(self, node: int) -> None:
         # tasks prepared on the node were dirtied by dps.drop_node already
-        self._free_slot_nodes.discard(node)
+        self.node_order.discard(node)
+        self._slot_busy(node)
+        self._capacity.drop(node)
         self._dirty_nodes.discard(node)
+        self._less_stale = True
+
+    # free-COP-slot transitions, mirrored into the DPS source-feasibility
+    # index so `cop_blocked` answers stay in lockstep with the probe truth
+    def _slot_freed(self, node: int) -> None:
+        if node not in self._free_slot_nodes:
+            self._free_slot_nodes.add(node)
+            self.dps.note_source_freed(node)
+
+    def _slot_busy(self, node: int) -> None:
+        if node in self._free_slot_nodes:
+            self._free_slot_nodes.discard(node)
+            self.dps.note_source_busy(node)
 
     # remember resource shapes of running tasks so finish can free them even
     # after the TaskSpec left the ready map
@@ -140,9 +203,14 @@ class WowScheduler:
     # ---------------------------------------------------------------- steps
     def schedule(self) -> list[Action]:
         actions: list[Action] = []
+        t0 = time.perf_counter()
         started = self._step1_start_prepared(actions)
+        t1 = time.perf_counter()
         self._step2_prepare_for_free_compute(actions, started)
         self._step3_speculative_prepare(actions)
+        t2 = time.perf_counter()
+        self.phase_s["step1_s"] += t1 - t0
+        self.phase_s["step23_s"] += t2 - t1
         return actions
 
     @property
@@ -161,22 +229,20 @@ class WowScheduler:
         for n in dirty_nodes:
             if n in self.nodes:
                 dirty.update(self.dps.iter_tasks_prepared_on(n))
+                self._capacity.refresh(n)
+        if dirty_nodes:
+            self._less_stale = True
         self._dirty_nodes = set()
         self._dirty_tasks = set()
-        # input-less tasks are prepared everywhere: any node change matters
-        dirty |= self._no_input_ready
-        node_order: list[int] | None = None
         for tid in dirty:
             t = self.ready.get(tid)
-            if t is None:
+            if t is None or not t.inputs:
                 self._startable.pop(tid, None)
+                if t is None:
+                    self._ready_index.discard(tid)
                 continue
-            if t.inputs:
-                prep = self.dps.prepared_nodes_task(tid)
-            else:
-                if node_order is None:
-                    node_order = sorted(self.nodes)
-                prep = node_order
+            self._ready_index.update_prep(tid, self.dps.prep_count(tid))
+            prep = self.dps.prepared_nodes_task(tid)
             cands = [n for n in prep if self.nodes[n].fits(t)]
             if cands:
                 self._startable[tid] = cands
@@ -184,14 +250,69 @@ class WowScheduler:
                 self._startable.pop(tid, None)
         return dirty, dirty_nodes
 
+    def _inputless_candidates(self) -> dict[int, list[int]]:
+        """Candidate lists (all fitting nodes, canonical order) for the
+        currently *startable* input-less ready tasks, built per task shape
+        from the capacity classes -- no per-task node scan."""
+        shapes: dict[tuple[int, float], list[int]] = {}
+        for tid in self._no_input_ready:
+            t = self.ready[tid]
+            shapes.setdefault((t.mem, t.cores), []).append(tid)
+        cands: dict[int, list[int]] = {}
+        for (mem, cores), tids in shapes.items():
+            fit = self._capacity.fitting(mem, cores)
+            if fit:
+                for tid in tids:
+                    cands[tid] = fit
+        return cands
+
+    def _solve_inputless(self,
+                         cands: dict[int, list[int]]) -> dict[int, int]:
+        """Capacity-only step-1 assignment for input-less ready tasks.
+
+        The instance (tasks in submission order, candidates = all fitting
+        nodes) is exactly the subproblem the joint solver would extract for
+        these tasks, and `ilp.solve` applies the same decomposition and
+        per-component exact/greedy gate the incremental solver does -- so
+        the assignment is bit-equal to the old weld-everything path while
+        touching neither the DPS nor the solver's component structure."""
+        ordered = sorted(cands, key=self._submit_seq.__getitem__)
+        problem = AssignmentProblem(
+            [self.ready[tid] for tid in ordered],
+            {tid: cands[tid] for tid in ordered}, self.nodes)
+        return solve_stateless(problem)
+
     # Step 1: assign ready tasks to prepared nodes via the incremental ILP.
     def _step1_start_prepared(self, actions: list[Action]) -> set[int]:
         dirty_tasks, dirty_nodes = self._refresh_candidates()
-        # the solver must see every event's dirty sets (even when nothing is
-        # currently startable) so its component structure stays in sync
-        assign = self._solver.solve_event(
-            self.ready, self._startable, self._submit_seq,
-            dirty_tasks, dirty_nodes)
+        less_cands: dict[int, list[int]] = {}
+        if self._no_input_ready and self._less_stale:
+            t0 = time.perf_counter()
+            less_cands = self._inputless_candidates()
+            self._less_stale = False
+            self.phase_s["inputless_s"] += time.perf_counter() - t0
+        if less_cands and self._startable:
+            # mixed event: startable input-less and data-bound tasks could
+            # compete for the same capacity -- solve jointly (the pre-fast-
+            # path behaviour) so decisions stay bit-exact.  Joint time is
+            # inherently unsplittable and counts as solver time, not
+            # inputless_s.
+            assign = self._solver.solve_event(
+                self.ready, {**self._startable, **less_cands},
+                self._submit_seq, dirty_tasks | set(less_cands), dirty_nodes)
+        else:
+            # the solver must see every event's dirty sets (even when
+            # nothing is currently startable) so its component structure
+            # stays in sync
+            assign = self._solver.solve_event(
+                self.ready, self._startable, self._submit_seq,
+                dirty_tasks, dirty_nodes)
+            if less_cands:
+                t0 = time.perf_counter()
+                extra = self._solve_inputless(less_cands)
+                self.phase_s["inputless_s"] += time.perf_counter() - t0
+                assign = dict(assign)
+                assign.update(extra)
         started: set[int] = set()
         for tid, n in sorted(assign.items()):
             t = self.ready.pop(tid)
@@ -209,9 +330,17 @@ class WowScheduler:
             self._submit_seq.pop(tid, None)
             if t.inputs:
                 self.dps.untrack_task(tid)
+                self._ready_index.discard(tid)
             else:
                 self._no_input_ready.discard(tid)
         return started
+
+    def _sync_ready_index(self) -> None:
+        """Propagate pending blocked-state flips from the DPS
+        source-feasibility index into the step-2/3 orders."""
+        for tid in self.dps.drain_blocked_dirty():
+            if tid in self._ready_index:
+                self._ready_index.set_blocked(tid, self.dps.cop_blocked(tid))
 
     def _cop_slots_free(self, node_id: int) -> bool:
         return self.nodes[node_id].active_cops < self.c_node
@@ -234,37 +363,41 @@ class WowScheduler:
 
     def _start_cop(self, plan: CopPlan, actions: list[Action]) -> None:
         self.active_cops[plan.id] = plan
-        self.cops_per_task[plan.task_id] = (
-            self.cops_per_task.get(plan.task_id, 0) + 1)
+        cops = self.cops_per_task.get(plan.task_id, 0) + 1
+        self.cops_per_task[plan.task_id] = cops
+        self._ready_index.update_cops(plan.task_id, cops)
         for n in plan.nodes:
             state = self.nodes[n]
             state.active_cops += 1
             if state.active_cops >= self.c_node:
-                self._free_slot_nodes.discard(n)
+                self._slot_busy(n)
         self.inflight_targets.add((plan.task_id, plan.target))
         self.cops_created += 1
         actions.append(StartCop(plan))
 
     # Step 2: prepare unassigned ready tasks on nodes with free *compute*.
+    #
+    # Both steps iterate a snapshot of the indexed ready order instead of
+    # sorting the backlog: the ReadySet maintains exactly the reference's
+    # sort keys, and parks tasks whose probes are provably infeasible
+    # (dps.cop_blocked), whose skipping is decision-free because failed
+    # probes have no side effects.  Mid-loop mutations (COP starts bump the
+    # visited task's COP count and may block later tasks) update the
+    # structure immediately but not the materialized snapshot -- matching
+    # the reference, which sorts once and re-checks budget/feasibility at
+    # visit time, as the loops here still do.
     def _step2_prepare_for_free_compute(self, actions: list[Action],
                                         started: set[int]) -> None:
         del started  # step 1 already popped started tasks from self.ready
         if not self._free_slot_nodes:
             return
-        waiting = [t for t in self.ready.values() if t.inputs]
-        if not waiting:
-            return
+        self._sync_ready_index()
         dps = self.dps
-
-        # ascending |N_prep|, ties by number of running COPs for the task
-        def key(t: TaskSpec) -> tuple:
-            return (dps.prep_count(t.id), self.cops_per_task.get(t.id, 0),
-                    -t.priority, t.id)
-
-        for t in sorted(waiting, key=key):
+        for tid in self._ready_index.step2_order():
             if not self._free_slot_nodes:
                 break               # no COP can start or source anywhere
-            if not self._task_cop_budget(t.id):
+            t = self.ready[tid]
+            if not self._task_cop_budget(tid):
                 continue
             feas, pool = self._cop_target_pool(t)
             if pool is None:
@@ -274,15 +407,15 @@ class WowScheduler:
             cands = [
                 n for n in pool
                 if self.nodes[n].fits(t)
-                and (t.id, n) not in self.inflight_targets
-                and not dps.is_prepared_task(t.id, n)
+                and (tid, n) not in self.inflight_targets
+                and not dps.is_prepared_task(tid, n)
             ]
             if not cands:
                 continue
             # earliest start ~ fewest missing bytes (paper §IV-C)
-            cands.sort(key=lambda n: (dps.missing_bytes_task(t.id, n), n))
+            cands.sort(key=lambda n: (dps.missing_bytes_task(tid, n), n))
             for n in cands:
-                plan = dps.plan_cop(t.id, t.inputs, n, self._free_slot_nodes,
+                plan = dps.plan_cop(tid, t.inputs, n, self._free_slot_nodes,
                                     feasible_targets=feas)
                 if plan is not None:
                     self._start_cop(plan, actions)
@@ -293,26 +426,32 @@ class WowScheduler:
     def _step3_speculative_prepare(self, actions: list[Action]) -> None:
         if not self._free_slot_nodes:
             return
+        self._sync_ready_index()
         dps = self.dps
-        todo = [t for t in self.ready.values()
-                if t.inputs and self._task_cop_budget(t.id)]
-        for t in sorted(todo, key=lambda t: (-t.priority, t.id)):
+        order = self.node_order
+        for tid in self._ready_index.step3_order():
             if not self._free_slot_nodes:
                 break
+            if not self._task_cop_budget(tid):
+                continue
+            t = self.ready[tid]
             feas, pool = self._cop_target_pool(t)
             if pool is None:
                 continue
-            cands = sorted(
+            # canonical order: the reference probes nodes in enumeration
+            # order and plan_cop consumes tie-break randomness per feasible
+            # probe, so the probe order is decision-relevant
+            cands = order.sort(
                 n for n in pool
-                if (t.id, n) not in self.inflight_targets
-                and not dps.is_prepared_task(t.id, n)
+                if (tid, n) not in self.inflight_targets
+                and not dps.is_prepared_task(tid, n)
                 and t.mem <= self.nodes[n].mem        # could ever run here
                 and t.cores <= self.nodes[n].cores)
             if not cands:
                 continue
             best: CopPlan | None = None
             for n in cands:
-                plan = dps.plan_cop(t.id, t.inputs, n, self._free_slot_nodes,
+                plan = dps.plan_cop(tid, t.inputs, n, self._free_slot_nodes,
                                     feasible_targets=feas)
                 if plan is not None and (best is None or plan.price < best.price):
                     best = plan

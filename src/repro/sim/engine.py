@@ -14,8 +14,8 @@ import dataclasses
 import heapq
 import math
 
-from ..core import (DFS_LOC, FileSpec, NodeState, StartCop, StartTask,
-                    TaskSpec, abstract_ranks, assign_priorities)
+from ..core import (DFS_LOC, FileSpec, NodeOrder, NodeState, StartCop,
+                    StartTask, TaskSpec, abstract_ranks, assign_priorities)
 from ..core.types import CopPlan
 from .dfs import CephModel, DfsModel, NfsModel
 from .metrics import SimResult, gini
@@ -79,9 +79,15 @@ class Simulation:
         self.nodes: dict[int, NodeState] = {
             i: NodeState(i, cfg.mem, cfg.cores) for i in range(cfg.n_nodes)
         }
+        # canonical node enumeration order, owned by the engine and shared
+        # with scheduler/DPS: semantically `list(self.nodes)`, so a node
+        # may re-join under its old (lower) id and every layer still
+        # enumerates it last, like the reference scheduler's dict scans
+        self.node_order = NodeOrder(self.nodes)
         self.strategy: BaseStrategy = make_strategy(
             strategy, self.nodes, c_node=cfg.c_node, c_task=cfg.c_task,
-            seed=cfg.seed, reference_core=cfg.reference_core)
+            seed=cfg.seed, reference_core=cfg.reference_core,
+            node_order=self.node_order)
 
         extra: tuple[int, ...] = ()
         self.nfs_server = cfg.n_nodes
@@ -310,10 +316,16 @@ class Simulation:
 
     # ----------------------------------------------------- failure/elastic
     def _fail_node(self, node: int) -> None:
-        if not isinstance(self.strategy, WowStrategy):
-            raise NotImplementedError("failure injection targets WOW")
+        """Node leaves the cluster: abort its running tasks (resubmitted),
+        abort COPs touching it, shrink the resource pool.
+
+        Under the WOW strategy the node's intermediate replicas are dropped
+        and lost files are recovered by re-running their producers.  Under
+        orig/cws all intermediate data lives in the DFS, whose replica
+        placement is failure-oblivious in this model (the paper's Ceph runs
+        rep=2, masking a single node loss; the NFS server node never
+        fails), so only the compute pool shrinks."""
         self.failed_nodes.add(node)
-        sched, dps = self.strategy.sched, self.strategy.dps
         # abort running tasks on the node
         for tid, run in list(self.task_runs.items()):
             if run.node != node:
@@ -321,7 +333,8 @@ class Simulation:
             for fl in run.flows:
                 self.fm.remove(fl)
             self.task_runs.pop(tid)
-            sched.on_task_finished(tid, node)  # frees (soon-removed) node
+            # frees resources on the (soon-removed) node
+            self.strategy.on_task_finished(tid, node)
             self._resubmit(self.wf.tasks[tid])
         # abort COPs touching the node
         for cid, cop in list(self.cop_runs.items()):
@@ -330,10 +343,13 @@ class Simulation:
                     self.fm.remove(fl)
                 self.cop_runs.pop(cid)
                 self.strategy.on_cop_finished(cop.plan, ok=False)
-        # drop replicas (index-safe); recover lost files by re-running
-        # their producers
-        lost = dps.drop_node(node)
+        lost: list[int] = []
+        if isinstance(self.strategy, WowStrategy):
+            # drop replicas (index-safe); recover lost files by re-running
+            # their producers
+            lost = self.strategy.dps.drop_node(node)
         self.nodes.pop(node, None)
+        self.node_order.discard(node)
         self.strategy.on_node_removed(node)
         for f in lost:
             self._recover_file(f)
@@ -373,6 +389,7 @@ class Simulation:
 
     def _join_node(self, node_id: int) -> None:
         self.nodes[node_id] = NodeState(node_id, self.cfg.mem, self.cfg.cores)
+        self.node_order.add(node_id)
         for kind, bw in (("up", self.cfg.net_bw), ("down", self.cfg.net_bw),
                          ("dr", self.cfg.disk_read_bw),
                          ("dw", self.cfg.disk_write_bw)):

@@ -9,8 +9,8 @@
 """
 from __future__ import annotations
 
-from ..core import (DataPlacementService, NodeState, StartTask, TaskSpec,
-                    WowScheduler)
+from ..core import (DataPlacementService, NodeOrder, NodeState, StartTask,
+                    TaskSpec, WowScheduler)
 from ..core.reference import ReferenceWowScheduler
 from ..core.types import Action
 
@@ -59,6 +59,22 @@ class OrigStrategy(BaseStrategy):
         self.queue: list[TaskSpec] = []
         self._rr = 0
         self._node_ids = sorted(nodes)
+
+    def on_node_added(self, node: int) -> None:
+        if node not in self._node_ids:
+            self._node_ids.append(node)   # joins the round-robin ring last
+
+    def on_node_removed(self, node: int) -> None:
+        if node in self._node_ids:
+            idx = self._node_ids.index(node)
+            self._node_ids.pop(idx)
+            # keep the round-robin pointer on the same successor node
+            if idx < self._rr:
+                self._rr -= 1
+            if self._node_ids:
+                self._rr %= len(self._node_ids)
+            else:
+                self._rr = 0
 
     def submit(self, task: TaskSpec) -> None:
         self.queue.append(task)
@@ -117,11 +133,15 @@ class WowStrategy(BaseStrategy):
 
     def __init__(self, nodes: dict[int, NodeState], c_node: int = 1,
                  c_task: int = 2, seed: int = 0,
-                 reference_core: bool = False) -> None:
+                 reference_core: bool = False,
+                 node_order: NodeOrder | None = None) -> None:
         super().__init__(nodes)
-        self.dps = DataPlacementService(seed=seed)
+        if node_order is None:
+            node_order = NodeOrder(nodes)
+        self.dps = DataPlacementService(seed=seed, node_order=node_order)
         sched_cls = ReferenceWowScheduler if reference_core else WowScheduler
-        self.sched = sched_cls(nodes, self.dps, c_node=c_node, c_task=c_task)
+        self.sched = sched_cls(nodes, self.dps, c_node=c_node, c_task=c_task,
+                               node_order=node_order)
         self._specs: dict[int, TaskSpec] = {}
 
     def submit(self, task: TaskSpec) -> None:
@@ -147,12 +167,14 @@ class WowStrategy(BaseStrategy):
 
 def make_strategy(name: str, nodes: dict[int, NodeState], *, c_node: int = 1,
                   c_task: int = 2, seed: int = 0,
-                  reference_core: bool = False) -> BaseStrategy:
+                  reference_core: bool = False,
+                  node_order: NodeOrder | None = None) -> BaseStrategy:
     if name == "orig":
         return OrigStrategy(nodes)
     if name == "cws":
         return CwsStrategy(nodes)
     if name == "wow":
         return WowStrategy(nodes, c_node=c_node, c_task=c_task, seed=seed,
-                           reference_core=reference_core)
+                           reference_core=reference_core,
+                           node_order=node_order)
     raise ValueError(f"unknown strategy {name!r}")

@@ -453,19 +453,40 @@ def test_aggregate_report_renders_rows_and_scalars(tmp_path):
 
 
 def test_scheduler_scale_reports_solver_phase():
-    """The benchmark's sustained runner must expose the solver-phase clock
-    and stats for both implementations (keys the CI smoke job asserts on
-    BENCH_scheduler_scale.json)."""
+    """The benchmark's sustained runner must expose the solver- and
+    step-2/3-phase clocks and stats for both implementations (keys the CI
+    smoke job asserts on BENCH_scheduler_scale.json)."""
     from benchmarks.scheduler_scale import run_cold, run_sustained
     from repro.core import ReferenceWowScheduler, WowScheduler
     for cls in (WowScheduler, ReferenceWowScheduler):
         cold_ms, cold_solver_ms, _ = run_cold(4, 8, cls)
         assert cold_solver_ms >= 0.0
-        sus_ms, solver_ms, _, stats = run_sustained(4, 8, cls, iters=2)
-        assert solver_ms >= 0.0
-        assert sus_ms >= solver_ms
+        sus = run_sustained(4, 8, cls, iters=2)
+        assert sus["solver_ms"] >= 0.0
+        assert sus["step23_ms"] >= 0.0
+        assert sus["ms"] >= sus["solver_ms"]
+        assert sus["ms"] >= sus["step23_ms"]
         if cls is WowScheduler:
-            assert stats is not None and "solve_s" in stats \
-                and "comps_rebuilt" in stats
+            assert sus["stats"] is not None and "solve_s" in sus["stats"] \
+                and "comps_rebuilt" in sus["stats"]
         else:
-            assert stats is None
+            assert sus["stats"] is None
+
+
+def test_scheduler_scale_inputless_and_warmstart_rows():
+    """The fan-out (input-less) scenario must run both implementations to
+    identical decisions at small scale, and the declined-placement
+    warm-start micro-benchmark must report its keys."""
+    from benchmarks.scheduler_scale import (run_inputless, run_warmstart,
+                                            sanity_check_equivalence)
+    from repro.core import ReferenceWowScheduler, WowScheduler
+    sanity_check_equivalence(n_nodes=6, n_ready=24, sustained_iters=6,
+                             inputless=True)
+    for cls in (WowScheduler, ReferenceWowScheduler):
+        sus = run_inputless(4, 8, cls, iters=2)
+        assert sus["ms"] >= 0.0
+    warm = run_warmstart(iters=8)
+    assert warm["objective_safe"]
+    assert warm["warm_seeds"] > 0
+    assert warm["strict_ms_per_event"] > 0.0
+    assert warm["warm_ms_per_event"] > 0.0
