@@ -32,6 +32,10 @@ Two further scenarios cover this PR's other step-1 paths:
   is unchanged) the previous assignment seeds the B&B incumbent.  Records
   strict-vs-warm ms/event and asserts objective safety (warm never worse;
   equal whenever the B&B stays inside its node budget).
+* ``run_dfs_churn`` -- orig/cws/wow end-to-end on Ceph rep=2 with an
+  injected node failure, recording the failure-aware DFS counters
+  (degraded-read + re-replication bytes per strategy; headline key
+  ``dfs_churn``, row scenario ``dfs_churn``).
 
 Results land in BENCH_scheduler_scale.json; headline numbers are the
 sustained speedup and the phase times on the (1024 nodes, 4096 ready
@@ -232,6 +236,39 @@ def run_inputless(n_nodes: int, n_ready: int, cls, iters: int,
     return run_sustained(n_nodes, n_ready, cls, iters, seed, inputless=True)
 
 
+# --------------------------------------------------- DFS churn (rep=2 Ceph)
+def run_dfs_churn(fail_t: float = 30.0, fail_node: int = 1) -> dict:
+    """orig/cws/wow on Ceph rep=2 with an injected node failure: the
+    failure-aware DFS serves degraded reads off surviving replicas and
+    re-replicates under-replicated objects through the shared flow network.
+    Records the churn counters per strategy (the orig/cws baselines must
+    show nonzero degraded-read + re-replication bytes; WOW keeps
+    intermediates node-local, so its DFS repair traffic is zero)."""
+    from repro.sim import SimConfig, Simulation
+    from repro.workloads import make_workflow
+
+    out: dict[str, dict] = {}
+    for strat in ("orig", "cws", "wow"):
+        wf = make_workflow("group", scale=0.25)
+        sim = Simulation(wf, SimConfig(dfs="ceph", ceph_replication=2), strat)
+        sim.schedule_failure(fail_t, fail_node)
+        r = sim.run()
+        out[strat] = {
+            "makespan": r.makespan,
+            "degraded_reads": r.degraded_reads,
+            "degraded_read_bytes": r.degraded_read_bytes,
+            "rereplication_bytes": r.rereplication_bytes,
+            "repairs_completed": r.repairs_completed,
+            "dfs_lost_files": r.dfs_lost_files,
+        }
+    for strat in ("orig", "cws"):
+        assert out[strat]["degraded_read_bytes"] > 0, (
+            f"{strat}: expected degraded reads under churn")
+        assert out[strat]["rereplication_bytes"] > 0, (
+            f"{strat}: expected re-replication traffic under churn")
+    return out
+
+
 # ------------------------------------------------- warm-start (declined RM)
 def run_warmstart(n_nodes: int = 6, n_tasks: int = 10, iters: int = 60,
                   seed: int = 0) -> dict:
@@ -400,6 +437,16 @@ def main() -> list[dict]:
          f"{warm['strict_ms_per_event']:.3f},warm_ms,"
          f"{warm['warm_ms_per_event']:.3f},warm_seeds,{warm['warm_seeds']}")
 
+    # node churn on Ceph rep=2: degraded reads + re-replication traffic
+    churn = run_dfs_churn()
+    for strat, c in churn.items():
+        rows.append({"impl": strat, "scenario": "dfs_churn", **c})
+        emit(f"scheduler_scale,dfs_churn,{strat},makespan,"
+             f"{c['makespan']:.1f},degraded_read_bytes,"
+             f"{c['degraded_read_bytes']:.0f},rereplication_bytes,"
+             f"{c['rereplication_bytes']:.0f},repairs,"
+             f"{c['repairs_completed']}")
+
     write_json("scheduler_scale", {
         "rows": rows,
         "headline": {"nodes": HEADLINE[0], "tasks": HEADLINE[1],
@@ -416,6 +463,7 @@ def main() -> list[dict]:
                      "inputless_ms_per_iter_indexed": less["indexed"]["ms"],
                      "inputless_speedup": inputless_speedup,
                      "warmstart": warm,
+                     "dfs_churn": churn,
                      "solver_stats": headline_stats},
     })
     return rows

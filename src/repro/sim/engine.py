@@ -6,7 +6,10 @@ x (16 cores, 128 GB, SATA SSD 537/402 MB/s), 1 or 2 Gbit network, Ceph
 under one of the three strategies (orig / cws / wow).
 
 Beyond the paper: node failure injection + elastic node join, exercising the
-DPS's replica recovery (the paper's §VIII future work).
+DPS's replica recovery (the paper's §VIII future work) and the DFS's
+failure-aware replica lifecycle -- degraded reads off surviving replicas and
+background re-replication priced through the shared flow network
+(DESIGN.md "Failure-aware DFS replication").
 """
 from __future__ import annotations
 
@@ -118,6 +121,14 @@ class Simulation:
         self._seq = 0
         self.done_tasks: dict[int, tuple[float, float, int]] = {}  # id->(s,e,node)
         self.failed_nodes: set[int] = set()
+        # DFS churn subsystem: in-flight repair flows + read-flow context
+        # (task, file-or-None, size) so reads off a dead source can be
+        # re-issued from a surviving replica
+        self.repair_flows: dict[int, tuple[int, int, float]] = {}
+        self._repair_flow_by_fid: dict[int, int] = {}
+        self._read_ctx: dict[int, tuple[int, int | None, float]] = {}
+        self.rereplication_bytes = 0.0
+        self.repairs_completed = 0
         # stats
         self.network_bytes = 0.0
         self.storage_per_node: dict[int, float] = {}
@@ -142,6 +153,18 @@ class Simulation:
         if any(l[0] == "up" for l in links):
             self.network_bytes += nbytes
         return f.id
+
+    def _drop_flow(self, flow_id: int) -> None:
+        """Deliberately abort an in-flight flow (node failure): refund the
+        bytes it never moved so network_bytes keeps meaning 'bytes that
+        crossed a NIC' even when transfers are cut short or restarted."""
+        f = self.fm.flows.get(flow_id)
+        if f is None:
+            return
+        if any(l[0] == "up" for l in f.links):
+            self.network_bytes -= self.fm.unsent(flow_id)
+        self.fm.remove(flow_id)
+        self._read_ctx.pop(flow_id, None)
 
     def schedule_failure(self, t: float, node: int) -> None:
         self._scheduled_failures.append((t, node))
@@ -203,6 +226,7 @@ class Simulation:
                 fid = self._add_flow(links, size, ("taskread", tid))
                 if fid is not None:
                     run.pending.add(fid)
+                    self._read_ctx[fid] = (tid, None, size)
         else:
             for f in task.inputs:
                 for links, size in self.dfs.read_paths(f, self.file_sizes[f],
@@ -210,11 +234,13 @@ class Simulation:
                     fid = self._add_flow(links, size, ("taskread", tid))
                     if fid is not None:
                         run.pending.add(fid)
+                        self._read_ctx[fid] = (tid, f, size)
             for links, size in self.dfs.input_read_paths(task.dfs_inputs,
                                                          node):
                 fid = self._add_flow(links, size, ("taskread", tid))
                 if fid is not None:
                     run.pending.add(fid)
+                    self._read_ctx[fid] = (tid, None, size)
         run.flows |= run.pending
         if not run.pending:
             self._begin_compute(tid)
@@ -241,16 +267,16 @@ class Simulation:
             self.storage_per_node[node] = (
                 self.storage_per_node.get(node, 0.0) + total)
         else:
+            # storage accounting is NOT done here: the DFS's placement map
+            # (dfs.stored_bytes_per_node) is authoritative -- it tracks
+            # replica loss and re-replication, which write-time accounting
+            # cannot -- and is merged into the storage Gini in _result()
             for f in task.outputs:
                 for links, size in self.dfs.write_paths(f, self.file_sizes[f],
                                                         node):
                     fid = self._add_flow(links, size, ("taskwrite", tid))
                     if fid is not None:
                         run.pending.add(fid)
-                    # storage accounting on the receiving node
-                    dst = links[-1][1]
-                    self.storage_per_node[dst] = (
-                        self.storage_per_node.get(dst, 0.0) + size)
             if task.dfs_outputs:
                 for links, size in self.dfs.write_paths(-tid - 1,
                                                         task.dfs_outputs,
@@ -258,9 +284,6 @@ class Simulation:
                     fid = self._add_flow(links, size, ("taskwrite", tid))
                     if fid is not None:
                         run.pending.add(fid)
-                    dst = links[-1][1]
-                    self.storage_per_node[dst] = (
-                        self.storage_per_node.get(dst, 0.0) + size)
         run.flows |= run.pending
         if not run.pending:
             self._finish_task(tid)
@@ -317,21 +340,25 @@ class Simulation:
     # ----------------------------------------------------- failure/elastic
     def _fail_node(self, node: int) -> None:
         """Node leaves the cluster: abort its running tasks (resubmitted),
-        abort COPs touching it, shrink the resource pool.
+        abort COPs touching it, shrink the resource pool, and drive the
+        DFS replica lifecycle.
 
         Under the WOW strategy the node's intermediate replicas are dropped
         and lost files are recovered by re-running their producers.  Under
-        orig/cws all intermediate data lives in the DFS, whose replica
-        placement is failure-oblivious in this model (the paper's Ceph runs
-        rep=2, masking a single node loss; the NFS server node never
-        fails), so only the compute pool shrinks."""
+        orig/cws all intermediate data lives in the DFS, which is
+        failure-aware: the dead node's replicas are gone, in-flight reads
+        off the node restart from a surviving replica (degraded reads),
+        writes to the dead replica are dropped, and each under-replicated
+        object schedules a repair flow (survivor -> new holder) priced
+        through the FlowManager so re-replication traffic contends with
+        workflow COPs and task I/O."""
         self.failed_nodes.add(node)
         # abort running tasks on the node
         for tid, run in list(self.task_runs.items()):
             if run.node != node:
                 continue
             for fl in run.flows:
-                self.fm.remove(fl)
+                self._drop_flow(fl)
             self.task_runs.pop(tid)
             # frees resources on the (soon-removed) node
             self.strategy.on_task_finished(tid, node)
@@ -340,9 +367,19 @@ class Simulation:
         for cid, cop in list(self.cop_runs.items()):
             if node in cop.plan.nodes:
                 for fl in cop.flows:
-                    self.fm.remove(fl)
+                    self._drop_flow(fl)
                 self.cop_runs.pop(cid)
                 self.strategy.on_cop_finished(cop.plan, ok=False)
+        # DFS replica lifecycle: drop dead replicas, plan repairs, cancel
+        # in-flight repairs that touched the node (replacements included in
+        # `repairs`), then redirect surviving tasks' I/O off the dead node
+        repairs, aborted = self.dfs.fail_node(node)
+        for fid in aborted:
+            fl = self._repair_flow_by_fid.pop(fid, None)
+            if fl is not None:
+                self._drop_flow(fl)
+                self.repair_flows.pop(fl, None)
+        self._redirect_node_io(node)
         lost: list[int] = []
         if isinstance(self.strategy, WowStrategy):
             # drop replicas (index-safe); recover lost files by re-running
@@ -351,8 +388,61 @@ class Simulation:
         self.nodes.pop(node, None)
         self.node_order.discard(node)
         self.strategy.on_node_removed(node)
+        for spec in repairs:
+            self._launch_repair(*spec)
         for f in lost:
             self._recover_file(f)
+
+    def _redirect_node_io(self, node: int) -> None:
+        """Re-route in-flight task I/O of *surviving* tasks that crossed the
+        dead node.  Reads restart from scratch on a surviving replica (the
+        DFS already excludes the dead node and counts the degraded read);
+        writes to the dead replica are dropped -- the repair subsystem
+        restores redundancy from the surviving copy."""
+        for fl in self.fm.flows_on_node(node):
+            f = self.fm.flows.get(fl)
+            if f is None:
+                continue
+            kind = f.tag[0]
+            if kind not in ("taskread", "taskwrite"):
+                continue
+            tid = f.tag[1]
+            run = self.task_runs.get(tid)
+            if run is None or run.node == node:
+                continue
+            ctx = self._read_ctx.get(fl)
+            self._drop_flow(fl)
+            run.pending.discard(fl)
+            run.flows.discard(fl)
+            if kind == "taskread" and ctx is not None:
+                _, file_id, size = ctx
+                if file_id is not None:
+                    paths = self.dfs.read_paths(file_id, size, run.node)
+                else:
+                    paths = self.dfs.reroute_read(size, run.node)
+                for links, sz in paths:
+                    nf = self._add_flow(links, sz, ("taskread", tid))
+                    if nf is not None:
+                        run.pending.add(nf)
+                        run.flows.add(nf)
+                        self._read_ctx[nf] = (tid, file_id, sz)
+            if not run.pending:
+                if run.phase == "read":
+                    self._begin_compute(tid)
+                elif run.phase == "write":
+                    self._finish_task(tid)
+
+    def _launch_repair(self, file_id: int, src: int, dst: int,
+                       size: float) -> None:
+        links = (("dr", src), ("up", src), ("down", dst), ("dw", dst))
+        fl = self._add_flow(links, size, ("repair", file_id))
+        if fl is None:                  # zero-byte object: instant repair
+            self.repairs_completed += 1
+            for spec in self.dfs.commit_repair(file_id, dst):
+                self._launch_repair(*spec)
+            return
+        self.repair_flows[fl] = (file_id, dst, size)
+        self._repair_flow_by_fid[file_id] = fl
 
     def _recover_file(self, file_id: int, force: bool = False) -> None:
         """Re-execute the producer (transitively) of a lost file.
@@ -394,6 +484,7 @@ class Simulation:
                          ("dr", self.cfg.disk_read_bw),
                          ("dw", self.cfg.disk_write_bw)):
             self.fm.capacities[(kind, node_id)] = bw
+        self.dfs.add_node(node_id)      # joins the placement universe
         self.strategy.on_node_added(node_id)
 
     # ------------------------------------------------------------------ run
@@ -420,7 +511,7 @@ class Simulation:
             self.time = t_next
             progressed = False
             for f in completed:
-                self._on_flow_done(f.tag)
+                self._on_flow_done(f)
                 progressed = True
             while self.timers and self.timers[0][0] <= self.time + EPS:
                 _, _, kind, payload = heapq.heappop(self.timers)
@@ -435,9 +526,10 @@ class Simulation:
                 f"{sorted(missing)[:5]} (running={list(self.task_runs)[:5]})")
         return self._result()
 
-    def _on_flow_done(self, tag) -> None:
-        kind, ident = tag
+    def _on_flow_done(self, flow) -> None:
+        kind, ident = flow.tag
         if kind == "taskread":
+            self._read_ctx.pop(flow.id, None)
             run = self.task_runs.get(ident)
             if run is None:
                 return
@@ -458,6 +550,16 @@ class Simulation:
             cop.pending = {f for f in cop.pending if f in self.fm.flows}
             if not cop.pending:
                 self._finish_cop(ident, ok=True)
+        elif kind == "repair":
+            info = self.repair_flows.pop(flow.id, None)
+            if info is None:
+                return
+            file_id, dst, size = info
+            self._repair_flow_by_fid.pop(file_id, None)
+            self.rereplication_bytes += size
+            self.repairs_completed += 1
+            for spec in self.dfs.commit_repair(file_id, dst):
+                self._launch_repair(*spec)
 
     def _on_timer(self, kind: str, payload) -> None:
         if kind == "compute":
@@ -481,7 +583,16 @@ class Simulation:
         if isinstance(self.strategy, WowStrategy):
             cop_bytes = self.strategy.dps.cop_bytes_total
             cops_created = self.strategy.sched.cops_created
-        node_ids = sorted(set(range(self.cfg.n_nodes)) - self.failed_nodes)
+        # the engine's actual surviving node set -- includes elastic-join
+        # nodes (ids >= n_nodes), excludes failed ones; the NFS server is
+        # never in self.nodes
+        node_ids = sorted(self.nodes)
+        # engine-side storage (WOW local writes, COP landings) merged with
+        # the DFS's authoritative per-node replica bytes
+        storage = dict(self.storage_per_node)
+        for n, b in self.dfs.stored_bytes_per_node().items():
+            storage[n] = storage.get(n, 0.0) + b
+        lost_files = len(self.dfs.lost_files)
         return SimResult(
             workflow=self.wf.name,
             strategy=self.strategy.name,
@@ -496,10 +607,14 @@ class Simulation:
             cop_bytes=cop_bytes,
             unique_intermediate_bytes=unique,
             network_bytes=self.network_bytes,
-            gini_storage=gini([self.storage_per_node.get(n, 0.0)
-                               for n in node_ids]),
+            gini_storage=gini([storage.get(n, 0.0) for n in node_ids]),
             gini_cpu=gini([self.cpu_per_node.get(n, 0.0)
                            for n in node_ids]),
+            degraded_reads=self.dfs.degraded_reads,
+            degraded_read_bytes=self.dfs.degraded_read_bytes,
+            rereplication_bytes=self.rereplication_bytes,
+            repairs_completed=self.repairs_completed,
+            dfs_lost_files=lost_files,
         )
 
 

@@ -34,6 +34,12 @@ class SimResult:
     network_bytes: float                # all bytes that crossed a NIC
     gini_storage: float
     gini_cpu: float
+    # DFS churn (failure-aware replication; zero in failure-free runs)
+    degraded_reads: int = 0             # reads served off a non-ideal replica
+    degraded_read_bytes: float = 0.0
+    rereplication_bytes: float = 0.0    # repair traffic that completed
+    repairs_completed: int = 0
+    dfs_lost_files: int = 0             # objects whose every replica died
 
     @property
     def pct_no_cop(self) -> float:

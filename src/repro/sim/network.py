@@ -153,6 +153,26 @@ class FlowManager:
                     self._link_flows.pop(l, None)
         self._dirty_links.update(f.links)
 
+    def flows_on_node(self, node: int) -> list[int]:
+        """Ids of flows crossing any of the node's four links, ascending
+        (deterministic iteration order for the engine's failure redirect).
+        O(answer) via the persistent link index."""
+        ids: set[int] = set()
+        for kind in ("up", "down", "dr", "dw"):
+            ids |= self._link_flows.get((kind, node), set())
+        return sorted(ids)
+
+    def unsent(self, flow_id: int) -> float:
+        """Bytes the flow has not yet moved as of the current virtual time
+        (settling the lazily-advanced count), for abort accounting."""
+        f = self.flows.get(flow_id)
+        if f is None:
+            return 0.0
+        rem = f.remaining
+        if f.rate > 0 and self.now > f.settled:
+            rem -= f.rate * (self.now - f.settled)
+        return max(rem, 0.0)
+
     def _component(self) -> list[Flow]:
         """Flows transitively sharing a link with any dirty link."""
         seen_links: set[LinkId] = set()
@@ -287,6 +307,14 @@ class ReferenceFlowManager:
     def remove(self, flow_id: int) -> None:
         self.flows.pop(flow_id, None)
         self._dirty = True
+
+    def flows_on_node(self, node: int) -> list[int]:
+        return sorted(f.id for f in self.flows.values()
+                      if any(l[1] == node for l in f.links))
+
+    def unsent(self, flow_id: int) -> float:
+        f = self.flows.get(flow_id)
+        return max(f.remaining, 0.0) if f is not None else 0.0
 
     def recompute(self) -> None:
         if not self._dirty:

@@ -6,6 +6,14 @@
   order, resource-aware node choice, still DFS-based I/O.
 * ``WowStrategy``  -- the paper's contribution: wraps ``core.WowScheduler``
   (+DPS); intermediate data lives on node-local storage, moved by COPs.
+
+Node churn: all three strategies support failure injection and elastic
+join (``on_node_removed`` / ``on_node_added``).  For the DFS-bound
+baselines the engine additionally drives the failure-aware replica
+lifecycle (``sim/dfs.py``): their intermediate data survives a node loss
+via degraded reads and background re-replication, while WOW's node-local
+intermediates are recovered by re-running producers (``dps.drop_node``) --
+so churn comparisons price each design's actual recovery mechanism.
 """
 from __future__ import annotations
 

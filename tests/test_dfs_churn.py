@@ -1,0 +1,214 @@
+"""Failure-aware DFS replication subsystem + storage-metrics regressions.
+
+Covers the churn PR's guarantees:
+
+* failure-free runs are bit-identical (action log, makespan, network bytes)
+  to pre-churn ``main`` for all three strategies on both DFS backends
+  (goldens captured from the pre-PR tree in ``tests/data/churn_goldens.json``),
+* ``CephModel.stored_bytes_per_node`` actually accounts sizes (it returned
+  zeros for every node before this PR),
+* the storage Gini merges DFS-resident bytes and the Gini node universe is
+  the engine's live node set (elastic joins included, failed nodes not),
+* under injected node failure on Ceph rep=2 the orig/cws baselines show
+  nonzero degraded-read and re-replication bytes, new writes exclude dead
+  nodes, and repairs restore the replication factor.
+"""
+import hashlib
+import json
+import os
+
+import pytest
+from _hyp import given, settings, st
+
+from repro.sim import CephModel, SimConfig, Simulation, gini
+from repro.workloads import make_workflow
+
+_GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "data",
+                            "churn_goldens.json")
+with open(_GOLDEN_PATH) as _f:
+    GOLDENS = json.load(_f)["scenarios"]
+
+_SCALES = {"group": 0.25, "chain": 0.3}
+
+
+def _run(wf_name, strategy, dfs="ceph", failures=(), joins=(), **cfg):
+    wf = make_workflow(wf_name, scale=_SCALES[wf_name])
+    sim = Simulation(wf, SimConfig(dfs=dfs, **cfg), strategy)
+    for t, n in failures:
+        sim.schedule_failure(t, n)
+    for t, n in joins:
+        sim.schedule_join(t, n)
+    return sim, sim.run()
+
+
+# ------------------------------------------------ failure-free bit-identity
+@pytest.mark.parametrize("key", sorted(GOLDENS))
+def test_failure_free_runs_match_pre_churn_goldens(key):
+    """With no churn injected, the replica-lifecycle plumbing must be
+    invisible: same action log, makespan, and network bytes as the commit
+    the goldens were captured from."""
+    wf_name, strategy, dfs = key.split(":")
+    sim, res = _run(wf_name, strategy, dfs=dfs)
+    g = GOLDENS[key]
+    assert len(sim.action_log) == g["n_actions"]
+    assert hashlib.sha256(
+        repr(sim.action_log).encode()).hexdigest() == g["action_log_sha256"]
+    assert repr(res.makespan) == g["makespan"]
+    assert repr(res.network_bytes) == g["network_bytes"]
+    # and the churn counters stay zero
+    assert res.degraded_reads == 0 and res.degraded_read_bytes == 0
+    assert res.rereplication_bytes == 0 and res.repairs_completed == 0
+    assert res.dfs_lost_files == 0
+
+
+# --------------------------------------------- stored-bytes accounting bug
+def test_ceph_stored_bytes_accounting():
+    """Regression: out[r] = out.get(r, 0) never added the size, and
+    write_paths never recorded sizes -- the method returned all zeros."""
+    ceph = CephModel(n_nodes=4, replication=2, seed=0)
+    ceph.write_paths(7, 123, writer=0)
+    out = ceph.stored_bytes_per_node()
+    assert out == {r: 123 for r in ceph._placement[7]}
+    ceph.write_paths(8, 1000, writer=1)
+    out = ceph.stored_bytes_per_node()
+    assert sum(out.values()) == 2 * 123 + 2 * 1000
+
+
+def test_storage_gini_includes_dfs_resident_bytes():
+    """The engine merges dfs.stored_bytes_per_node() into the storage Gini
+    (it was never called before, so orig/cws ginis ignored all DFS bytes)."""
+    sim, res = _run("group", "orig", dfs="ceph")
+    dfs_bytes = sim.dfs.stored_bytes_per_node()
+    assert sum(dfs_bytes.values()) > 0
+    storage = dict(sim.storage_per_node)
+    for n, b in dfs_bytes.items():
+        storage[n] = storage.get(n, 0.0) + b
+    expect = gini([storage.get(n, 0.0) for n in sorted(sim.nodes)])
+    assert res.gini_storage == expect
+
+
+# --------------------------------------------------- Gini node universe bug
+def test_join_nodes_included_in_gini_universe():
+    """Regression: set(range(n_nodes)) - failed silently dropped elastic
+    joins (ids >= n_nodes) from gini_storage and gini_cpu."""
+    sim, res = _run("group", "cws", n_nodes=2,
+                    joins=((5.0, 2), (5.0, 3)))
+    assert sorted(sim.nodes) == [0, 1, 2, 3]
+    # the joined nodes did real work, so they must shape the Gini
+    assert any(sim.cpu_per_node.get(n, 0.0) > 0 for n in (2, 3))
+    assert res.gini_cpu == gini([sim.cpu_per_node.get(n, 0.0)
+                                 for n in [0, 1, 2, 3]])
+
+
+# ------------------------------------------------------- replica lifecycle
+def test_ceph_new_writes_exclude_dead_nodes():
+    ceph = CephModel(n_nodes=4, replication=2, seed=0)
+    ceph.fail_node(2)
+    for fid in range(40):
+        ceph.write_paths(fid, 10, writer=0)
+        assert 2 not in ceph._placement[fid]
+    ceph.add_node(4)                     # elastic join extends the universe
+    placed = set()
+    for fid in range(40, 400):
+        ceph.write_paths(fid, 10, writer=0)
+        placed |= set(ceph._placement[fid])
+    assert 4 in placed and 2 not in placed
+
+
+def test_ceph_degraded_read_and_repair_lifecycle():
+    ceph = CephModel(n_nodes=4, replication=2, seed=0)
+    ceph.write_paths(1, 100, writer=0)
+    a, b = ceph._placement[1]
+    repairs, aborted = ceph.fail_node(a)
+    assert aborted == []
+    assert len(repairs) == 1
+    fid, src, dst, size = repairs[0]
+    assert (fid, src, size) == (1, b, 100)
+    assert dst not in (a, b)
+    # under-replicated until the repair commits: reads are degraded and
+    # served off the survivor
+    reader = next(n for n in range(4) if n not in (a, b, dst))
+    before = ceph.degraded_reads
+    paths = ceph.read_paths(1, 100, reader)
+    assert ceph.degraded_reads == before + 1
+    assert ceph.degraded_read_bytes >= 100
+    src_nodes = {l[1] for links, _ in paths for l in links}
+    assert a not in src_nodes
+    # commit: dst now serves reads, replication restored, no longer degraded
+    assert ceph.commit_repair(1, dst) == []
+    assert sorted(ceph._placement[1]) == sorted((b, dst))
+    after = ceph.degraded_reads
+    ceph.read_paths(1, 100, reader)
+    assert ceph.degraded_reads == after
+
+
+def test_ceph_repair_aborted_when_source_dies():
+    """Losing the repair source cancels the in-flight repair; with no
+    survivor left the object is lost and reads fall back (counted)."""
+    ceph = CephModel(n_nodes=4, replication=2, seed=0)
+    ceph.write_paths(1, 100, writer=0)
+    a, b = ceph._placement[1]
+    repairs, _ = ceph.fail_node(a)
+    (_, src, dst, _), = repairs
+    repairs2, aborted2 = ceph.fail_node(src)          # survivor dies too
+    assert 1 in aborted2
+    assert all(spec[0] != 1 for spec in repairs2)     # nothing left to copy
+    assert ceph._placement[1] == ()
+    before = ceph.degraded_reads
+    paths = ceph.read_paths(1, 100, reader=dst)
+    assert paths and ceph.degraded_reads == before + 1
+    assert 1 in ceph.lost_files
+    # a re-write re-places the object on live nodes
+    ceph.write_paths(1, 100, writer=dst)
+    assert len(ceph._placement[1]) == 2
+    assert 1 not in ceph.lost_files
+
+
+# ------------------------------------------------- engine-level churn runs
+@pytest.mark.parametrize("strategy", ["orig", "cws"])
+def test_baselines_show_degraded_and_rereplication_under_failure(strategy):
+    """Acceptance criterion: injected failure on Ceph rep=2 yields nonzero
+    degraded-read and re-replication bytes for the DFS-bound baselines."""
+    sim, res = _run("group", strategy, dfs="ceph", failures=((30.0, 1),))
+    assert res.tasks_total == len(sim.wf.tasks)
+    assert res.rereplication_bytes > 0
+    assert res.repairs_completed > 0
+    assert res.degraded_reads > 0
+    assert res.degraded_read_bytes > 0
+    assert res.dfs_lost_files == 0        # rep=2 masks a single loss
+    # the dead node holds no replicas and serves no new placements
+    assert all(1 not in reps for reps in sim.dfs._placement.values())
+
+
+def test_wow_unaffected_by_dfs_repair():
+    """WOW keeps intermediates on node-local disks: no Ceph objects, so no
+    repair traffic (its recovery path is producer re-execution)."""
+    _, res = _run("group", "wow", dfs="ceph", failures=((30.0, 1),))
+    assert res.rereplication_bytes == 0 and res.repairs_completed == 0
+
+
+def test_double_failure_completes():
+    """Even when both replicas of some objects die (data loss), the
+    best-effort fallback keeps the run completing."""
+    sim, res = _run("group", "orig", dfs="ceph",
+                    failures=((30.0, 1), (40.0, 2)))
+    assert res.tasks_total == len(sim.wf.tasks)
+    assert res.rereplication_bytes > 0
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.sampled_from(["orig", "cws", "wow"]), st.integers(0, 7),
+       st.integers(10, 120))
+def test_property_single_failure_completes_and_counters_sane(
+        strategy, node, t_fail):
+    sim, res = _run("group", strategy, dfs="ceph",
+                    failures=((float(t_fail), node),))
+    assert res.tasks_total == len(sim.wf.tasks)
+    assert res.degraded_read_bytes >= 0
+    assert res.rereplication_bytes >= 0
+    assert res.dfs_lost_files == 0
+    assert all(node not in reps for reps in sim.dfs._placement.values())
+    # every planned repair either committed or was never needed: nothing
+    # stays pending once the flow network drains
+    assert sim.dfs._pending_repair == {}
+    assert sim.repair_flows == {}
