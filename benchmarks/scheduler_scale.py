@@ -36,6 +36,21 @@ Two further scenarios cover this PR's other step-1 paths:
   injected node failure, recording the failure-aware DFS counters
   (degraded-read + re-replication bytes per strategy; headline key
   ``dfs_churn``, row scenario ``dfs_churn``).
+* ``run_sim_throughput`` -- **end-to-end simulation wall-clock**: full
+  ``group`` workflow runs (one wave of input-less generator tasks + DFS
+  merges) for orig/cws/wow at 256/1024/4096 nodes, on both the incremental
+  heap fill and the retained ``flow_fill="scan"`` pre-heap engine.  Rows
+  carry wall seconds, events/sec and the FlowManager health counters;
+  makespans are asserted bit-identical between fills.  Headline key
+  ``sim_throughput`` with ``sim_speedup`` = the minimum scan/heap wall
+  ratio over the DFS-bound strategies (orig, cws) at the largest size both
+  fills ran (wow is reported but excluded from the ratio: its node-local
+  I/O keeps flow components tiny by design, so there is little fill time
+  to win back).  The scan fill is omitted beyond
+  ``_SIM_SCAN_MAX_NODES`` -- at 4096 nodes one pre-heap run takes tens of
+  minutes, which is precisely the regression this scenario guards against.
+  ``BENCH_SMOKE=1`` restricts the scenario to the smallest size so CI
+  stays fast (full-scale rows are a local/nightly tier).
 
 Results land in BENCH_scheduler_scale.json; headline numbers are the
 sustained speedup and the phase times on the (1024 nodes, 4096 ready
@@ -44,6 +59,7 @@ tasks) row.
 from __future__ import annotations
 
 import contextlib
+import os
 import random
 import time
 
@@ -211,6 +227,8 @@ def run_sustained(n_nodes: int, n_ready: int, cls, iters: int,
         step23_s0 = _step23_seconds(sched, acc23)
         stats0 = (dict(sched.solver_stats)
                   if isinstance(sched, WowScheduler) else None)
+        less0 = (dict(sched.inputless_stats)
+                 if isinstance(sched, WowScheduler) else None)
         actions = 0
         t0 = time.perf_counter()
         for _ in range(iters):
@@ -224,9 +242,11 @@ def run_sustained(n_nodes: int, n_ready: int, cls, iters: int,
     # matching the scope of solver_ms_per_iter
     stats = ({k: v - stats0[k] for k, v in sched.solver_stats.items()}
              if stats0 is not None else None)
+    less_stats = ({k: v - less0[k] for k, v in sched.inputless_stats.items()}
+                  if less0 is not None else None)
     return {"ms": dt_ms / iters, "solver_ms": solver_ms / iters,
             "step23_ms": step23_ms / iters, "actions": actions / iters,
-            "stats": stats}
+            "stats": stats, "inputless_stats": less_stats}
 
 
 def run_inputless(n_nodes: int, n_ready: int, cls, iters: int,
@@ -234,6 +254,96 @@ def run_inputless(n_nodes: int, n_ready: int, cls, iters: int,
     """Sustained fan-out phase: the whole backlog is input-less tasks, so
     every step-1 decision is pure capacity placement."""
     return run_sustained(n_nodes, n_ready, cls, iters, seed, inputless=True)
+
+
+# ------------------------------------------- end-to-end simulation throughput
+# (cluster size, workflow scale): ~1 generator task per node at 256/1024, a
+# half-wave at 4096 to keep the full tier affordable.  The scan (pre-heap)
+# baseline is only affordable up to _SIM_SCAN_MAX_NODES.
+SIM_SIZES = [(256, 2.56), (1024, 10.24), (4096, 20.48)]
+SIM_WORKFLOW = "group"
+_SIM_SCAN_MAX_NODES = 1024
+SIM_HEADLINE_STRATEGIES = ("orig", "cws")
+
+
+def bench_smoke() -> bool:
+    """True when BENCH_SMOKE=1: CI tier, full-scale rows skipped."""
+    return os.environ.get("BENCH_SMOKE", "") == "1"
+
+
+def run_sim_throughput(sizes: list[tuple[int, float]] | None = None,
+                       ) -> tuple[list[dict], dict]:
+    """Full-workflow simulation wall-clock, heap vs scan fill.
+
+    Returns (rows, headline): one row per (strategy, nodes, fill) with wall
+    seconds, events/sec and FlowManager health counters, and a headline
+    dict whose ``sim_speedup`` is the minimum scan/heap wall ratio over
+    the DFS-bound strategies at the largest size both fills ran.  Asserts
+    that both fills produce bit-identical makespans and event counts --
+    the cheap in-bench guard; the full proof is tests/test_flow_fill.py.
+    """
+    from repro.sim import SimConfig, Simulation
+    from repro.workloads import make_workflow
+
+    if sizes is None:
+        sizes = SIM_SIZES[:1] if bench_smoke() else SIM_SIZES
+    rows: list[dict] = []
+    speedups: dict[int, dict[str, float]] = {}
+    emit("scheduler_scale,sim_throughput,strategy,nodes,fill,wall_s,"
+         "events,events_per_s,makespan,flow_recomputes,mean_component")
+    for n_nodes, scale in sizes:
+        for strat in ("orig", "cws", "wow"):
+            walls: dict[str, float] = {}
+            results: dict[str, object] = {}
+            fills = ["heap"] + (["scan"] if n_nodes <= _SIM_SCAN_MAX_NODES
+                                else [])
+            for fill in fills:
+                wf = make_workflow(SIM_WORKFLOW, scale=scale)
+                cfg = SimConfig(n_nodes=n_nodes, dfs="ceph", flow_fill=fill)
+                t0 = time.perf_counter()
+                r = Simulation(wf, cfg, strat).run()
+                wall = time.perf_counter() - t0
+                walls[fill] = wall
+                results[fill] = r
+                rows.append({
+                    "impl": strat, "scenario": "sim_throughput",
+                    "nodes": n_nodes, "tasks": r.tasks_total, "fill": fill,
+                    "wall_s": wall, "events": r.sim_steps,
+                    "events_per_s": r.sim_steps / max(wall, 1e-9),
+                    "makespan": r.makespan,
+                    "flow_recomputes": r.flow_recomputes,
+                    "flow_compactions": r.flow_compactions,
+                    "flow_mean_component": r.flow_mean_component,
+                })
+                emit(f"scheduler_scale,sim_throughput,{strat},{n_nodes},"
+                     f"{fill},{wall:.2f},{r.sim_steps},"
+                     f"{r.sim_steps / max(wall, 1e-9):.0f},"
+                     f"{r.makespan:.2f},{r.flow_recomputes},"
+                     f"{r.flow_mean_component:.1f}")
+            if "scan" in results:
+                rh, rs = results["heap"], results["scan"]
+                assert rh.makespan == rs.makespan, (
+                    f"{strat}@{n_nodes}: heap fill changed the makespan")
+                assert rh.sim_steps == rs.sim_steps, (
+                    f"{strat}@{n_nodes}: heap fill changed the event count")
+                speedups.setdefault(n_nodes, {})[strat] = (
+                    walls["scan"] / max(walls["heap"], 1e-9))
+    head_nodes = max(speedups) if speedups else None
+    sim_speedup = None
+    if head_nodes is not None:
+        sim_speedup = min(speedups[head_nodes][s]
+                          for s in SIM_HEADLINE_STRATEGIES
+                          if s in speedups[head_nodes])
+        emit(f"scheduler_scale,sim_speedup_{head_nodes}n,{sim_speedup:.1f}x")
+    headline = {
+        "workflow": SIM_WORKFLOW,
+        "sizes": [n for n, _ in sizes],
+        "scan_max_nodes": _SIM_SCAN_MAX_NODES,
+        "speedups": {str(n): sp for n, sp in sorted(speedups.items())},
+        "sim_speedup_nodes": head_nodes,
+        "sim_speedup": sim_speedup,
+    }
+    return rows, headline
 
 
 # --------------------------------------------------- DFS churn (rep=2 Ceph)
@@ -429,6 +539,10 @@ def main() -> list[dict]:
     emit(f"scheduler_scale,inputless_speedup_{HEADLINE[0]}n,"
          f"{inputless_speedup:.1f}x")
 
+    # end-to-end simulation throughput: heap fill vs the pre-heap engine
+    sim_rows, sim_head = run_sim_throughput()
+    rows.extend(sim_rows)
+
     # warm start on the declined-placement path (harness-only)
     warm = run_warmstart()
     rows.append({"impl": "incremental-solver", "scenario": "warmstart_declined",
@@ -462,6 +576,8 @@ def main() -> list[dict]:
                      "inputless_ms_per_iter_reference": less["reference"]["ms"],
                      "inputless_ms_per_iter_indexed": less["indexed"]["ms"],
                      "inputless_speedup": inputless_speedup,
+                     "inputless_stats": less["indexed"]["inputless_stats"],
+                     "sim_throughput": sim_head,
                      "warmstart": warm,
                      "dfs_churn": churn,
                      "solver_stats": headline_stats},

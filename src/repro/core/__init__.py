@@ -4,10 +4,12 @@ Environment-free -- the discrete-event simulator (`repro.sim`) and the JAX
 runtime adapter (`repro.runtime`) both drive these classes.
 """
 from .dps import DataPlacementService
-from .ilp import (AssignmentProblem, IncrementalAssignmentSolver, decompose,
-                  solve, solve_exact, solve_greedy, solve_monolithic)
+from .ilp import (AssignmentProblem, FingerprintCache,
+                  IncrementalAssignmentSolver, component_fingerprint,
+                  decompose, solve, solve_exact, solve_greedy,
+                  solve_monolithic)
 from .priority import abstract_ranks, assign_priorities, priority_value
-from .readyset import CapacityClasses, NodeOrder, ReadySet
+from .readyset import CapacityClasses, NodeOrder, ReadySet, ShapeIndex
 from .reference import ReferenceWowScheduler
 from .scheduler import WowScheduler
 from .types import (Action, CopPlan, DFS_LOC, FileSpec, NodeState, StartCop,
@@ -15,9 +17,11 @@ from .types import (Action, CopPlan, DFS_LOC, FileSpec, NodeState, StartCop,
 
 __all__ = [
     "Action", "AssignmentProblem", "CapacityClasses", "CopPlan", "DFS_LOC",
-    "DataPlacementService", "FileSpec", "IncrementalAssignmentSolver",
-    "NodeOrder", "NodeState", "ReadySet", "ReferenceWowScheduler",
-    "StartCop", "StartTask", "TaskSpec", "Transfer", "WowScheduler",
-    "abstract_ranks", "assign_priorities", "decompose", "priority_value",
-    "solve", "solve_exact", "solve_greedy", "solve_monolithic",
+    "DataPlacementService", "FileSpec", "FingerprintCache",
+    "IncrementalAssignmentSolver", "NodeOrder", "NodeState", "ReadySet",
+    "ReferenceWowScheduler", "ShapeIndex", "StartCop", "StartTask",
+    "TaskSpec", "Transfer", "WowScheduler", "abstract_ranks",
+    "assign_priorities", "component_fingerprint", "decompose",
+    "priority_value", "solve", "solve_exact", "solve_greedy",
+    "solve_monolithic",
 ]

@@ -76,6 +76,16 @@ _EXACT_CAND_LIMIT = 64
 _EXACT_TASK_LIMIT = 24
 
 
+def exact_gate(n_tasks: int, n_cand: int) -> bool:
+    """True when an instance of ``n_tasks`` tasks with ``n_cand`` candidate
+    slots qualifies for the exact (B&B) tier.  The single definition of the
+    gate: `_solve_component` applies it per component, and the scheduler's
+    input-less fast path keys its analytic-greedy branch on its negation --
+    a bit-parity invariant, so external callers must use this function
+    rather than re-deriving the thresholds."""
+    return n_cand <= _EXACT_CAND_LIMIT or n_tasks <= _EXACT_TASK_LIMIT
+
+
 @dataclasses.dataclass
 class AssignmentProblem:
     tasks: list[TaskSpec]                      # candidate tasks (T_run)
@@ -270,7 +280,7 @@ def solve_monolithic(problem: AssignmentProblem) -> dict[int, int]:
 
 
 # ------------------------------------------------------------- decomposition
-def _group_by_shared_nodes(keys: list[int], cand_of) -> list[list[int]]:
+def group_by_shared_nodes(keys: list, cand_of) -> list[list]:
     """Union-find over ``keys`` via shared candidate nodes (``cand_of(key)``
     yields a key's node ids).  The earliest key wins as a group's root, so
     groups are ordered by first appearance and intra-group order follows
@@ -315,8 +325,8 @@ def _components(p: AssignmentProblem) -> list[tuple[list[TaskSpec],
     input task order, node ids are ascending."""
     by_id = {t.id: t for t in p.tasks}
     out = []
-    for group in _group_by_shared_nodes([t.id for t in p.tasks],
-                                        p.prepared.__getitem__):
+    for group in group_by_shared_nodes([t.id for t in p.tasks],
+                                       p.prepared.__getitem__):
         tasks = [by_id[tid] for tid in group]
         cand = {tid: p.prepared[tid] for tid in group}
         node_ids = sorted({n for c in cand.values() for n in c})
@@ -342,7 +352,7 @@ def _solve_component(tasks: list[TaskSpec], cand: dict[int, list[int]],
     ``cand`` lists must already be filtered to currently-fitting nodes."""
     prob = AssignmentProblem(tasks, cand, nodes)
     n_cand = sum(len(v) for v in cand.values())
-    if n_cand <= _EXACT_CAND_LIMIT or len(tasks) <= _EXACT_TASK_LIMIT:
+    if exact_gate(len(tasks), n_cand):
         exact = solve_exact(prob, node_budget, incumbent=seed)
         if exact is not None:
             return exact, "exact"
@@ -367,6 +377,61 @@ def solve(problem: AssignmentProblem) -> dict[int, int]:
             tasks, cand, {n: p.nodes[n] for n in node_ids})
         assign.update(sub)
     return assign
+
+
+# ------------------------------------------------------- fingerprint caching
+def component_fingerprint(tids, tasks: Mapping[int, TaskSpec],
+                          cand: Mapping[int, list[int]],
+                          nodes: Mapping[int, NodeState]):
+    """Canonical fingerprint of one component: everything the tiered solve's
+    decisions can depend on (task shapes, priorities, candidate structure,
+    node free resources), expressed id-relative so isomorphic components
+    recurring across events -- or across callers -- compare equal.  id ranks
+    are included because greedy tie-breaks on task id and candidate order
+    tie-breaks on node id.  Returns ``(fp, nlist, npos)`` where ``nlist`` is
+    the component's node ids ascending and ``npos`` their positions, the
+    coordinates :class:`FingerprintCache` encodes assignments in."""
+    nlist = sorted({n for c in cand.values() for n in c})
+    npos = {n: i for i, n in enumerate(nlist)}
+    id_rank = {t: i for i, t in enumerate(sorted(tids))}
+    fp = (
+        tuple((id_rank[t], tasks[t].mem, tasks[t].cores,
+               tasks[t].priority,
+               tuple(npos[n] for n in cand[t])) for t in tids),
+        tuple((nodes[n].free_mem, nodes[n].free_cores) for n in nlist),
+    )
+    return fp, nlist, npos
+
+
+class FingerprintCache:
+    """LRU of component solutions keyed by :func:`component_fingerprint`,
+    stored position-relative (task position, node position) so one cached
+    solution serves every isomorphic instance.  Shared machinery of the
+    incremental step-1 solver and the scheduler's input-less capacity path
+    (DESIGN.md "Incremental input-less placement")."""
+
+    def __init__(self, size: int = 2048) -> None:
+        self._entries: OrderedDict[tuple, tuple] = OrderedDict()
+        self._size = size
+
+    def get(self, fp: tuple, tids: list[int],
+            nlist: list[int]) -> dict[int, int] | None:
+        hit = self._entries.get(fp)
+        if hit is None:
+            return None
+        self._entries.move_to_end(fp)
+        return {tids[ti]: nlist[ni] for ti, ni in hit}
+
+    def put(self, fp: tuple, tids: list[int], npos: dict[int, int],
+            assign: dict[int, int]) -> None:
+        tpos = {t: i for i, t in enumerate(tids)}
+        self._entries[fp] = tuple(sorted(
+            (tpos[t], npos[n]) for t, n in assign.items()))
+        if len(self._entries) > self._size:
+            self._entries.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._entries)
 
 
 # ---------------------------------------------------------- incremental tier
@@ -411,8 +476,7 @@ class IncrementalAssignmentSolver:
                  strict_parity: bool = True, cache_size: int = 2048) -> None:
         self.nodes = nodes
         self.strict_parity = strict_parity
-        self._cache: OrderedDict[tuple, tuple] = OrderedDict()
-        self._cache_size = cache_size
+        self._cache = FingerprintCache(cache_size)
         self._comp_tasks: dict[int, list[int]] = {}    # cid -> tids (seq order)
         self._comp_nodes: dict[int, frozenset[int]] = {}
         self._comp_assign: dict[int, dict[int, int]] = {}
@@ -492,7 +556,7 @@ class IncrementalAssignmentSolver:
         # regroup the pending tasks (submission order) into components
         ptasks = sorted(pending, key=seq.__getitem__)
         out: dict[int, int] = {}
-        for tids in _group_by_shared_nodes(ptasks, candidates.__getitem__):
+        for tids in group_by_shared_nodes(ptasks, candidates.__getitem__):
             assign = self._solve_comp(tids, tasks, candidates, prev)
             cid = self._next_cid
             self._next_cid += 1
@@ -511,26 +575,11 @@ class IncrementalAssignmentSolver:
     # -------------------------------------------------------------- helpers
     def _solve_comp(self, tids, tasks, candidates, prev):
         cand = {t: candidates[t] for t in tids}
-        nlist = sorted({n for c in cand.values() for n in c})
-        npos = {n: i for i, n in enumerate(nlist)}
-        id_rank = {t: i for i, t in enumerate(sorted(tids))}
-        # Canonical fingerprint: everything the solver's decisions can
-        # depend on, expressed id-relative so isomorphic components
-        # recurring across events hit the cache.  id ranks are included
-        # because greedy tie-breaks on task id and candidate order
-        # tie-breaks on node id.
-        fp = (
-            tuple((id_rank[t], tasks[t].mem, tasks[t].cores,
-                   tasks[t].priority,
-                   tuple(npos[n] for n in cand[t])) for t in tids),
-            tuple((self.nodes[n].free_mem, self.nodes[n].free_cores)
-                  for n in nlist),
-        )
-        hit = self._cache.get(fp)
+        fp, nlist, npos = component_fingerprint(tids, tasks, cand, self.nodes)
+        hit = self._cache.get(fp, tids, nlist)
         if hit is not None:
-            self._cache.move_to_end(fp)
             self.stats["cache_hits"] += 1
-            return {tids[ti]: nlist[ni] for ti, ni in hit}
+            return hit
         self.stats["cache_misses"] += 1
 
         seed = None
@@ -546,11 +595,7 @@ class IncrementalAssignmentSolver:
             if tier == "aborted":
                 self.stats["budget_aborts"] += 1
 
-        tpos = {t: i for i, t in enumerate(tids)}
-        self._cache[fp] = tuple(sorted(
-            (tpos[t], npos[n]) for t, n in assign.items()))
-        if len(self._cache) > self._cache_size:
-            self._cache.popitem(last=False)
+        self._cache.put(fp, tids, npos, assign)
         return assign
 
     def _warm_seed(self, tids, tasks, cand, prev):

@@ -21,6 +21,14 @@ O(backlog) rescans into O(dirty)-shaped index maintenance (DESIGN.md
   instead of an O(nodes)-per-task scan, which is what lets the scheduler
   drop input-less tasks from the DPS/component machinery entirely.
 
+* :class:`ShapeIndex` -- input-less ready tasks bucketed by resource shape
+  ``(mem, cores)``, each bucket pre-sorted in the greedy visit order
+  ``(-priority, id)`` and maintained in O(log R) under submit/start.
+  Together with :class:`CapacityClasses` it makes the scheduler's
+  capacity-only step-1 path O(shapes + assigned) per stale event instead of
+  an O(backlog) regroup-and-rebuild (DESIGN.md "Incremental input-less
+  placement").
+
 * :class:`ReadySet` -- the priority-indexed ready structure for steps 2-3.
   A bucket queue over ``|N_prep|`` (the leading component of the step-2
   sort key) holds, per bucket, a bisect-maintained list sorted by the
@@ -151,6 +159,65 @@ class CapacityClasses:
     def any_fit(self, mem: int, cores: float) -> bool:
         return any(fm >= mem and fc >= cores
                    for fm, fc in self._members)
+
+
+class ShapeIndex:
+    """Input-less ready tasks bucketed by resource shape ``(mem, cores)``.
+
+    Each bucket is a bisect-maintained list of ``(-priority, task id)`` --
+    the exact visit order of ``ilp.solve_greedy`` -- so the scheduler's
+    capacity fast path can walk just the assignable prefix of a shape
+    instead of re-sorting the whole input-less backlog per event.  Shape
+    iteration order is bucket creation order (dict insertion), which the
+    consumers never depend on: the union-find over shapes keys on shared
+    fitting nodes and the merged per-component assignments are
+    order-insensitive.
+    """
+
+    def __init__(self) -> None:
+        self._groups: dict[tuple[int, float], list[tuple[float, int]]] = {}
+        self._shape_of: dict[int, tuple[int, float]] = {}
+        self._negprio: dict[int, float] = {}
+
+    def add(self, tid: int, mem: int, cores: float,
+            priority: float) -> None:
+        if tid in self._shape_of:       # resubmission: replace cleanly
+            self.discard(tid)
+        shape = (mem, cores)
+        self._shape_of[tid] = shape
+        self._negprio[tid] = -priority
+        insort(self._groups.setdefault(shape, []), (-priority, tid))
+
+    def discard(self, tid: int) -> None:
+        shape = self._shape_of.pop(tid, None)
+        if shape is None:
+            return
+        group = self._groups[shape]
+        group.pop(bisect_left(group, (self._negprio.pop(tid), tid)))
+        if not group:
+            del self._groups[shape]
+
+    def shapes(self) -> list[tuple[int, float]]:
+        """Shapes with at least one task (bucket creation order)."""
+        return list(self._groups)
+
+    def group(self, shape: tuple[int, float]) -> list[tuple[float, int]]:
+        """The shape's live ``(-priority, id)``-sorted bucket (read-only:
+        callers must not mutate it)."""
+        return self._groups[shape]
+
+    def tasks_of(self, shape: tuple[int, float]) -> list[int]:
+        """Task ids of the shape in the greedy visit order."""
+        return [tid for _, tid in self._groups[shape]]
+
+    def shape_of(self, tid: int) -> tuple[int, float]:
+        return self._shape_of[tid]
+
+    def __contains__(self, tid: int) -> bool:
+        return tid in self._shape_of
+
+    def __len__(self) -> int:
+        return len(self._shape_of)
 
 
 class ReadySet:

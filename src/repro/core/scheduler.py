@@ -39,12 +39,18 @@ remaining per-event O(backlog) scans:
     prepared everywhere -- pure capacity placement.  They never enter the
     DPS or the incremental solver's component structure (which they used to
     weld into one always-dirty component); their step-1 subproblem is built
-    from `readyset.CapacityClasses` (all fitting nodes per task *shape*)
-    and solved by the same stateless exact/greedy tiers (`ilp.solve`), so
-    decisions are unchanged.  On the rare event where input-less *and*
-    data-bound tasks are startable at once the two subproblems could
-    compete for capacity, and the scheduler falls back to one joint solve
-    -- bit-equal to the always-joint behaviour by construction.
+    per *shape* from `readyset.ShapeIndex` (pre-sorted greedy order,
+    maintained under submit/start) and `readyset.CapacityClasses` (all
+    fitting nodes per shape), then solved per shape-component by the
+    cheapest decision-identical tier: an analytic uniform-shape greedy for
+    large single-shape components, else `ilp.solve` behind the canonical
+    fingerprint cache -- O(shapes + assigned) per stale fan-out event
+    instead of O(backlog), with decisions unchanged (DESIGN.md
+    "Incremental input-less placement").  On the rare event where
+    input-less *and* data-bound tasks are startable at once the two
+    subproblems could compete for capacity, and the scheduler falls back
+    to one joint solve -- bit-equal to the always-joint behaviour by
+    construction.
   * **Indexed steps 2-3.**  `readyset.ReadySet` keeps every data-bound
     ready task pre-sorted under both step orders, updated in O(log R) as
     DPS prepared-counts and per-task COP counts change; tasks whose COP is
@@ -70,9 +76,11 @@ from __future__ import annotations
 import time
 
 from .dps import DataPlacementService
-from .ilp import AssignmentProblem, IncrementalAssignmentSolver
+from .ilp import (AssignmentProblem, FingerprintCache,
+                  IncrementalAssignmentSolver, component_fingerprint,
+                  exact_gate, group_by_shared_nodes)
 from .ilp import solve as solve_stateless
-from .readyset import CapacityClasses, NodeOrder, ReadySet
+from .readyset import CapacityClasses, NodeOrder, ReadySet, ShapeIndex
 from .types import (Action, CopPlan, NodeState, StartCop, StartTask, TaskSpec)
 
 
@@ -113,8 +121,16 @@ class WowScheduler:
         self._submit_seq: dict[int, int] = {}      # ILP task order = FIFO
         self._dirty_tasks: set[int] = set()
         self._dirty_nodes: set[int] = set()
-        self._no_input_ready: set[int] = set()     # prepared everywhere
         self._less_stale = True                    # input-less path dirty?
+        # input-less ready tasks (prepared everywhere) live in the shape
+        # index only: shape -> (-priority, id)-sorted buckets, plus the
+        # fingerprint cache for the recurring capacity subproblem (DESIGN.md
+        # "Incremental input-less placement")
+        self._less_index = ShapeIndex()
+        self._less_cache = FingerprintCache()
+        self.inputless_stats: dict[str, int] = {
+            "events": 0, "fast_solves": 0, "cache_hits": 0,
+            "cache_misses": 0, "joint_events": 0}
         self._startable: dict[int, list[int]] = {} # cached prep ∩ fits, != []
         self._free_slot_nodes: set[int] = {
             n for n, s in nodes.items() if s.active_cops < c_node}
@@ -138,7 +154,7 @@ class WowScheduler:
                 self.cops_per_task.get(task.id, 0),
                 blocked=self.dps.cop_blocked(task.id))
         else:
-            self._no_input_ready.add(task.id)
+            self._less_index.add(task.id, task.mem, task.cores, task.priority)
             self._less_stale = True
 
     def on_task_finished(self, task_id: int, node: int) -> None:
@@ -253,50 +269,132 @@ class WowScheduler:
     def _inputless_candidates(self) -> dict[int, list[int]]:
         """Candidate lists (all fitting nodes, canonical order) for the
         currently *startable* input-less ready tasks, built per task shape
-        from the capacity classes -- no per-task node scan."""
-        shapes: dict[tuple[int, float], list[int]] = {}
-        for tid in self._no_input_ready:
-            t = self.ready[tid]
-            shapes.setdefault((t.mem, t.cores), []).append(tid)
+        from the shape index and the capacity classes -- needed in full
+        only on the (rare) mixed event that must be solved jointly."""
         cands: dict[int, list[int]] = {}
-        for (mem, cores), tids in shapes.items():
-            fit = self._capacity.fitting(mem, cores)
+        for shape in self._less_index.shapes():
+            fit = self._capacity.fitting(*shape)
             if fit:
-                for tid in tids:
+                for tid in self._less_index.tasks_of(shape):
                     cands[tid] = fit
         return cands
 
-    def _solve_inputless(self,
-                         cands: dict[int, list[int]]) -> dict[int, int]:
-        """Capacity-only step-1 assignment for input-less ready tasks.
+    def _solve_inputless(self) -> dict[int, int]:
+        """Capacity-only step-1 assignment for input-less ready tasks,
+        O(shapes + assigned) per stale event instead of O(backlog).
 
-        The instance (tasks in submission order, candidates = all fitting
-        nodes) is exactly the subproblem the joint solver would extract for
-        these tasks, and `ilp.solve` applies the same decomposition and
-        per-component exact/greedy gate the incremental solver does -- so
-        the assignment is bit-equal to the old weld-everything path while
-        touching neither the DPS nor the solver's component structure."""
-        ordered = sorted(cands, key=self._submit_seq.__getitem__)
-        problem = AssignmentProblem(
-            [self.ready[tid] for tid in ordered],
-            {tid: cands[tid] for tid in ordered}, self.nodes)
-        return solve_stateless(problem)
+        Decision-identical to handing the whole input-less backlog to
+        `ilp.solve` (the pre-index path, equivalence-tested): shapes whose
+        fitting-node sets overlap are grouped with the same union-find the
+        solver's decomposition uses, and every task of a shape carries the
+        same candidate list, so shape components expand to exactly the
+        task<->node components `ilp.solve` would find.  Each component is
+        then answered by the cheapest tier that is provably bit-equal:
+
+        * **uniform fast path** -- a single-shape component past the exact
+          gate (``ilp.exact_gate``, the single definition both callers
+          share) is what ``solve_greedy`` would see; for identical tasks
+          greedy is
+          "best-fit place in (-priority, id) order until the first failure"
+          (free capacity never grows mid-solve, so every later task of the
+          shape fails too) and its repair pass provably no-ops (a skipped
+          task can have no strictly-lower-priority placed task when
+          placement order is priority-descending and all shapes are equal).
+          The shape index stores buckets in that exact order, so this costs
+          O(assigned x fitting nodes) -- no backlog scan, no sort.
+        * **generic tier** -- small or multi-shape components go through
+          `ilp.solve` unchanged, behind a canonical fingerprint cache
+          (`ilp.FingerprintCache`, the step-1 solver's machinery) so a
+          recurring capacity subproblem is answered without re-searching.
+        """
+        self.inputless_stats["events"] += 1
+        fits: dict[tuple[int, float], list[int]] = {}
+        for shape in self._less_index.shapes():
+            fit = self._capacity.fitting(*shape)
+            if fit:
+                fits[shape] = fit
+        if not fits:
+            return {}
+        assign: dict[int, int] = {}
+        for comp in group_by_shared_nodes(list(fits), fits.__getitem__):
+            if len(comp) == 1:
+                shape = comp[0]
+                group = self._less_index.group(shape)
+                fit = fits[shape]
+                if not exact_gate(len(group), len(group) * len(fit)):
+                    self.inputless_stats["fast_solves"] += 1
+                    assign.update(self._greedy_uniform(shape, group, fit))
+                    continue
+            tids = sorted(
+                (tid for s in comp for tid in self._less_index.tasks_of(s)),
+                key=self._submit_seq.__getitem__)
+            cand = {tid: fits[self._less_index.shape_of(tid)]
+                    for tid in tids}
+            assign.update(self._solve_inputless_component(tids, cand))
+        return assign
+
+    def _greedy_uniform(self, shape: tuple[int, float],
+                        group: list[tuple[float, int]],
+                        fit: list[int]) -> dict[int, int]:
+        """Best-fit placement of identical tasks in ``(-priority, id)``
+        order, stopping at the first task that fits nowhere -- bit-equal to
+        ``solve_greedy`` on the single-shape component (see
+        :meth:`_solve_inputless`)."""
+        mem, cores = shape
+        free_mem = {n: self.nodes[n].free_mem for n in fit}
+        free_cores = {n: self.nodes[n].free_cores for n in fit}
+        out: dict[int, int] = {}
+        for _, tid in group:
+            best = None
+            best_key = None
+            for n in fit:
+                fm, fc = free_mem[n], free_cores[n]
+                if fm >= mem and fc >= cores:
+                    key = (fc - cores, fm - mem, n)
+                    if best is None or key < best_key:
+                        best, best_key = n, key
+            if best is None:
+                break
+            out[tid] = best
+            free_mem[best] -= mem
+            free_cores[best] -= cores
+        return out
+
+    def _solve_inputless_component(self, tids: list[int],
+                                   cand: dict[int, list[int]]) -> dict[int, int]:
+        """One small/multi-shape input-less component through the tiered
+        stateless solve, answered via the canonical fingerprint cache when
+        the subproblem recurred."""
+        fp, nlist, npos = component_fingerprint(
+            tids, self.ready, cand, self.nodes)
+        hit = self._less_cache.get(fp, tids, nlist)
+        if hit is not None:
+            self.inputless_stats["cache_hits"] += 1
+            return hit
+        self.inputless_stats["cache_misses"] += 1
+        sub = solve_stateless(AssignmentProblem(
+            [self.ready[tid] for tid in tids], cand, self.nodes))
+        self._less_cache.put(fp, tids, npos, sub)
+        return sub
 
     # Step 1: assign ready tasks to prepared nodes via the incremental ILP.
     def _step1_start_prepared(self, actions: list[Action]) -> set[int]:
         dirty_tasks, dirty_nodes = self._refresh_candidates()
+        stale = len(self._less_index) > 0 and self._less_stale
         less_cands: dict[int, list[int]] = {}
-        if self._no_input_ready and self._less_stale:
+        if stale and self._startable:
+            # mixed event: startable input-less and data-bound tasks could
+            # compete for the same capacity -- expand the full candidate
+            # dict (O(fitting backlog), rare) and solve jointly (the
+            # pre-fast-path behaviour) so decisions stay bit-exact.
             t0 = time.perf_counter()
             less_cands = self._inputless_candidates()
             self._less_stale = False
             self.phase_s["inputless_s"] += time.perf_counter() - t0
-        if less_cands and self._startable:
-            # mixed event: startable input-less and data-bound tasks could
-            # compete for the same capacity -- solve jointly (the pre-fast-
-            # path behaviour) so decisions stay bit-exact.  Joint time is
-            # inherently unsplittable and counts as solver time, not
-            # inputless_s.
+        if less_cands:
+            # joint time is inherently unsplittable and counts as solver
+            # time, not inputless_s
+            self.inputless_stats["joint_events"] += 1
             assign = self._solver.solve_event(
                 self.ready, {**self._startable, **less_cands},
                 self._submit_seq, dirty_tasks | set(less_cands), dirty_nodes)
@@ -307,12 +405,14 @@ class WowScheduler:
             assign = self._solver.solve_event(
                 self.ready, self._startable, self._submit_seq,
                 dirty_tasks, dirty_nodes)
-            if less_cands:
+            if stale and not self._startable:
                 t0 = time.perf_counter()
-                extra = self._solve_inputless(less_cands)
+                extra = self._solve_inputless()
+                self._less_stale = False
                 self.phase_s["inputless_s"] += time.perf_counter() - t0
-                assign = dict(assign)
-                assign.update(extra)
+                if extra:
+                    assign = dict(assign)
+                    assign.update(extra)
         started: set[int] = set()
         for tid, n in sorted(assign.items()):
             t = self.ready.pop(tid)
@@ -332,7 +432,7 @@ class WowScheduler:
                 self.dps.untrack_task(tid)
                 self._ready_index.discard(tid)
             else:
-                self._no_input_ready.discard(tid)
+                self._less_index.discard(tid)
         return started
 
     def _sync_ready_index(self) -> None:

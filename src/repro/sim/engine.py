@@ -49,6 +49,10 @@ class SimConfig:
     # run on the retained pre-refactor implementations (equivalence tests)
     reference_flow: bool = False         # ReferenceFlowManager
     reference_core: bool = False         # ReferenceWowScheduler inside wow
+    # per-recompute allocator: "heap" (incremental bottleneck selection) or
+    # "scan" (retained pre-heap progressive fill -- the pre-PR engine, kept
+    # as the equivalence reference and the sim_throughput baseline)
+    flow_fill: str = "heap"
 
 
 @dataclasses.dataclass
@@ -106,8 +110,11 @@ class Simulation:
                            extra_net_bw=cfg.net_bw,
                            extra_disk_read_bw=cfg.nfs_disk_read_bw,
                            extra_disk_write_bw=cfg.nfs_disk_write_bw)
-        fm_cls = ReferenceFlowManager if cfg.reference_flow else FlowManager
-        self.fm = fm_cls(caps)
+        if cfg.reference_flow:
+            self.fm: FlowManager | ReferenceFlowManager = \
+                ReferenceFlowManager(caps)
+        else:
+            self.fm = FlowManager(caps, fill=cfg.flow_fill)
 
         self.ranks = abstract_ranks(wf.abstract_edges)
         self.file_sizes = {f.id: f.size for f in wf.files.values()}
@@ -138,6 +145,7 @@ class Simulation:
         self.tasks_no_cop = 0
         self._scheduled_failures: list[tuple[float, int]] = []
         self._scheduled_joins: list[tuple[float, int]] = []
+        self.steps_executed = 0              # engine loop steps (events/sec)
         # (time, kind, task id, node) per applied action -- equivalence tests
         self.action_log: list[tuple[float, str, int, int]] = []
 
@@ -498,6 +506,7 @@ class Simulation:
         steps = 0
         while True:
             steps += 1
+            self.steps_executed = steps
             if steps > max_steps:
                 raise RuntimeError("simulation step budget exceeded")
             self.fm.recompute()
@@ -593,6 +602,10 @@ class Simulation:
         for n, b in self.dfs.stored_bytes_per_node().items():
             storage[n] = storage.get(n, 0.0) + b
         lost_files = len(self.dfs.lost_files)
+        # flow-manager health (zeros on the counter-less frozen reference)
+        fm_health = (self.fm.health() if hasattr(self.fm, "health")
+                     else {"recomputes": 0, "compactions": 0,
+                           "mean_component": 0.0})
         return SimResult(
             workflow=self.wf.name,
             strategy=self.strategy.name,
@@ -615,6 +628,10 @@ class Simulation:
             rereplication_bytes=self.rereplication_bytes,
             repairs_completed=self.repairs_completed,
             dfs_lost_files=lost_files,
+            sim_steps=self.steps_executed,
+            flow_recomputes=int(fm_health["recomputes"]),
+            flow_compactions=int(fm_health["compactions"]),
+            flow_mean_component=float(fm_health["mean_component"]),
         )
 
 

@@ -40,6 +40,11 @@ class SimResult:
     rereplication_bytes: float = 0.0    # repair traffic that completed
     repairs_completed: int = 0
     dfs_lost_files: int = 0             # objects whose every replica died
+    # engine / flow-manager health (fill-regression observability)
+    sim_steps: int = 0                  # discrete-event loop steps
+    flow_recomputes: int = 0            # non-trivial rate recomputes
+    flow_compactions: int = 0           # ETA-heap rebuilds
+    flow_mean_component: float = 0.0    # mean flows per recompute
 
     @property
     def pct_no_cop(self) -> float:

@@ -25,6 +25,17 @@ added/removed since the last call: max-min allocations of link-disjoint
 components are independent, so untouched flows keep both their rate and
 their heap entries.  ``ReferenceFlowManager`` below retains the original
 scan-everything implementation as the equivalence-test oracle.
+
+Within one fill, bottleneck selection itself is incremental (DESIGN.md
+"Incremental rate allocation"): ``_heap_fill`` replaces the reference
+``_progressive_fill``'s per-round scan over every link (O(rounds x links)
+per recompute, near-global under congestion) with a share-ordered heap over
+links and per-link version counters for lazy invalidation, so a recompute
+costs O((F_comp + rounds) log L) while producing bit-identical rates (the
+heap key carries the link's first-flow insertion index, which is exactly
+the reference's tie-break).  The scan fill is retained as the ``fill="scan"``
+reference path (``SimConfig.flow_fill``) -- it *is* the pre-heap engine --
+and the two are property- and golden-tested against each other.
 """
 from __future__ import annotations
 
@@ -106,14 +117,101 @@ def _progressive_fill(flows: list[Flow],
         link_flows[best_link].clear()
 
 
+def _heap_fill(flows: list[Flow], capacities: dict[LinkId, float]) -> None:
+    """Progressive filling with incremental bottleneck selection.
+
+    Rate-identical to :func:`_progressive_fill` (property- and
+    equivalence-tested): the same per-link residual capacities evolve
+    through the same arithmetic, and each round's bottleneck is the link
+    with the minimal fair share, ties broken by first-flow insertion order
+    -- exactly the reference's first-strictly-smaller-wins scan.  Instead
+    of rescanning every link per round (O(rounds x links)), links live in a
+    min-heap keyed by ``(share, insertion index)``; entries are lazily
+    invalidated through a per-link version counter and only the links a
+    frozen flow crosses are re-keyed, so a fill costs
+    O((flows + rounds) log links).
+
+    Identity argument, in brief: a link's share only changes when one of
+    its flows is frozen (capacity and flow count are both touched then and
+    only then), so an un-popped heap entry with a current version carries
+    the share the reference scan would recompute; the subtractions applied
+    to a link within one round all use the same ``best_share`` value, so
+    their (set-iteration) order cannot change the float result; and the
+    clamp at zero commutes with equal-value subtraction the same way it
+    does in the reference.
+    """
+    remaining_cap: dict[LinkId, float] = {}
+    link_flows: dict[LinkId, set[int]] = {}
+    link_order: dict[LinkId, int] = {}      # first-flow insertion index
+    links_by_order: list[LinkId] = []
+    for f in flows:
+        for l in f.links:
+            if l not in link_flows:
+                link_flows[l] = set()
+                remaining_cap[l] = capacities[l]
+                link_order[l] = len(links_by_order)
+                links_by_order.append(l)
+            link_flows[l].add(f.id)
+    by_id = {f.id: f for f in flows}
+    version = dict.fromkeys(link_flows, 0)
+    # heap entries: (share, insertion index, version); the index is unique
+    # per link so the version is never reached by tuple comparison, and
+    # equal shares resolve to the earliest-inserted link like the scan does
+    heap = [(remaining_cap[l] / len(link_flows[l]), link_order[l], 0)
+            for l in links_by_order]
+    heapq.heapify(heap)
+    n_unfrozen = sum(1 for f in flows if f.links)
+    touched: set[LinkId] = set()
+    while n_unfrozen and heap:
+        best_share, order, ver = heapq.heappop(heap)
+        best_link = links_by_order[order]
+        if ver != version[best_link]:
+            continue                        # stale: link was re-keyed
+        fids = link_flows[best_link]
+        if not fids:
+            continue
+        touched.clear()
+        for fid in list(fids):
+            f = by_id[fid]
+            f.rate = best_share
+            n_unfrozen -= 1
+            for l in f.links:
+                link_flows[l].discard(fid)
+                remaining_cap[l] -= best_share
+                if remaining_cap[l] < 0:
+                    remaining_cap[l] = 0.0
+                touched.add(l)
+        for l in touched:
+            version[l] += 1
+            n = len(link_flows[l])
+            if n:
+                heapq.heappush(
+                    heap, (remaining_cap[l] / n, link_order[l], version[l]))
+
+
+_FILLS = {"heap": _heap_fill, "scan": _progressive_fill}
+
+
 class FlowManager:
     """Holds active flows and computes max-min fair rates incrementally.
 
     The engine batches adds/removes per event step and calls ``recompute``
-    once, then asks for ``next_completion`` and ``advance``s virtual time.
+    once, then asks for ``next_completion`` and ``advance``s virtual time;
+    a quiescent step (no flow added or removed since the last call) skips
+    allocation entirely because the dirty-link set is empty.
+
+    ``fill`` selects the per-recompute allocator: ``"heap"`` (default) is
+    the incremental bottleneck-selection fill, ``"scan"`` the retained
+    pre-heap ``_progressive_fill`` -- rate-identical, kept as the reference
+    path for equivalence tests and as the benchmark baseline.
     """
 
-    def __init__(self, capacities: dict[LinkId, float]) -> None:
+    def __init__(self, capacities: dict[LinkId, float],
+                 fill: str = "heap") -> None:
+        if fill not in _FILLS:
+            raise ValueError(f"unknown fill {fill!r}")
+        self.fill = fill
+        self._fill = _FILLS[fill]
         self.capacities = capacities
         self.flows: dict[int, Flow] = {}
         self._next_id = 0
@@ -124,7 +222,10 @@ class FlowManager:
         # flow is removed or its epoch moved on -- skipped on pop.
         self._completions: list[tuple[float, int, int]] = []  # half-byte ETA
         self._horizon: list[tuple[float, int, int]] = []      # full ETA
-        self.compactions = 0                        # heap rebuilds (metrics)
+        # health counters (surfaced in SimResult / bench rows)
+        self.compactions = 0                        # heap rebuilds
+        self.recomputes = 0                         # non-trivial fills
+        self.comp_flows_total = 0                   # Σ component sizes
 
     # ------------------------------------------------------------------ API
     def add(self, links: tuple[LinkId, ...], nbytes: float,
@@ -230,13 +331,15 @@ class FlowManager:
         self._dirty_links.clear()
         if not comp:
             return
+        self.recomputes += 1
+        self.comp_flows_total += len(comp)
         for f in comp:
             # settle lazily-advanced byte counts before the rate changes
             if f.rate > 0 and self.now > f.settled:
                 f.remaining = max(f.remaining - f.rate * (self.now - f.settled),
                                   0.0)
             f.settled = self.now
-        _progressive_fill(comp, self.capacities)
+        self._fill(comp, self.capacities)
         for f in comp:
             f.epoch += 1
             self._push(f)
@@ -278,6 +381,20 @@ class FlowManager:
     @property
     def active(self) -> int:
         return len(self.flows)
+
+    @property
+    def mean_component(self) -> float:
+        """Mean flows per non-trivial recompute (fill-regression signal:
+        a drift toward the active-flow count means components are welding
+        together and the incremental recompute is going global)."""
+        return self.comp_flows_total / self.recomputes if self.recomputes \
+            else 0.0
+
+    def health(self) -> dict[str, float]:
+        """Counters for SimResult / benchmark rows."""
+        return {"recomputes": self.recomputes,
+                "compactions": self.compactions,
+                "mean_component": self.mean_component}
 
 
 class ReferenceFlowManager:

@@ -1,0 +1,262 @@
+"""Bit-parity tests: incremental heap fill vs the retained scan fill.
+
+``sim.network._heap_fill`` replaces ``_progressive_fill``'s per-round
+full-link scan with a share-ordered heap (DESIGN.md "Incremental rate
+allocation").  The claim is *bit-identity*, not approximation: the same
+residual-capacity arithmetic runs in the same order, only bottleneck
+*selection* is incremental.  Checked here at three layers:
+
+* direct fill calls over randomized flow sets -> identical ``rate`` floats;
+* a ``FlowManager(fill="heap")`` vs ``fill="scan"`` pair driven through
+  randomized add / remove / node-fail / elastic-join / advance streams ->
+  identical rates, completion order and completion times at every step;
+* whole simulations (orig/cws/wow, failure + join runs included) ->
+  identical action logs, makespans and event counts.
+
+Health-counter surfacing (``SimResult.flow_*``) is covered at the bottom.
+"""
+import math
+import random
+
+import pytest
+
+from repro.sim import FlowManager, SimConfig, Simulation, build_links
+from repro.sim.network import Flow, _heap_fill, _progressive_fill
+from repro.workloads import make_workflow
+
+from _hyp import given, settings, st
+
+
+def _random_instance(rng):
+    """Random capacities + flows, including shared links, zero-byte flows
+    and capacity ties (the tie-break is the risky part of heap selection)."""
+    n_nodes = rng.randint(1, 10)
+    caps = {}
+    for n in range(n_nodes):
+        for kind in ("up", "down", "dr", "dw"):
+            # few distinct values => frequent equal fair shares
+            caps[(kind, n)] = rng.choice([1.0, 2.0, 5.0, 100.0])
+    link_ids = list(caps)
+    flows = []
+    for i in range(rng.randint(0, 25)):
+        k = rng.randint(1, 4)
+        links = tuple(rng.sample(link_ids, k))
+        flows.append(Flow(i, links, rng.uniform(0.0, 1e6), tag=i))
+    return caps, flows
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=150, deadline=None)
+def test_heap_fill_rates_bit_identical(seed):
+    rng = random.Random(seed)
+    caps, flows = _random_instance(rng)
+    scan = [Flow(f.id, f.links, f.remaining, f.tag) for f in flows]
+    heap = [Flow(f.id, f.links, f.remaining, f.tag) for f in flows]
+    _progressive_fill(scan, caps)
+    _heap_fill(heap, caps)
+    for a, b in zip(scan, heap):
+        assert a.rate == b.rate          # exact float equality, no approx
+
+
+def test_heap_fill_share_tie_prefers_first_inserted_link():
+    # two disjoint link pairs with identical shares: the reference scan
+    # freezes the first-inserted link first; selection order must not leak
+    # into rates, but both fills must agree exactly
+    caps = {("up", 0): 10.0, ("down", 1): 10.0,
+            ("up", 2): 10.0, ("down", 3): 10.0}
+    mk = lambda: [Flow(0, (("up", 0), ("down", 1)), 100.0, "a"),
+                  Flow(1, (("up", 2), ("down", 3)), 100.0, "b"),
+                  Flow(2, (("up", 0), ("down", 1)), 100.0, "c")]
+    scan, heap = mk(), mk()
+    _progressive_fill(scan, caps)
+    _heap_fill(heap, caps)
+    assert [f.rate for f in scan] == [f.rate for f in heap] == [5.0, 10.0, 5.0]
+
+
+def test_heap_fill_zero_capacity_and_zero_bytes():
+    caps = {("up", 0): 0.0, ("down", 1): 5.0}
+    mk = lambda: [Flow(0, (("up", 0), ("down", 1)), 10.0, "a"),
+                  Flow(1, (("down", 1),), 0.0, "b")]
+    scan, heap = mk(), mk()
+    _progressive_fill(scan, caps)
+    _heap_fill(heap, caps)
+    assert [f.rate for f in scan] == [f.rate for f in heap]
+    assert scan[0].rate == 0.0
+
+
+# ------------------------------------------------ manager-level stream parity
+def _pair(n_nodes):
+    caps = build_links(n_nodes, net_bw=100.0, disk_read_bw=537.0,
+                       disk_write_bw=402.0)
+    return FlowManager(dict(caps), fill="heap"), \
+        FlowManager(dict(caps), fill="scan")
+
+
+def _assert_state_equal(heap_fm, scan_fm):
+    assert set(heap_fm.flows) == set(scan_fm.flows)
+    for fid, sf in scan_fm.flows.items():
+        hf = heap_fm.flows[fid]
+        assert hf.rate == sf.rate
+        assert hf.remaining == sf.remaining
+    dt_h, _ = heap_fm.next_completion()
+    dt_s, _ = scan_fm.next_completion()
+    assert dt_h == dt_s
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_fill_stream_parity_add_remove_fail(seed):
+    """Randomized add/remove/node-fail/join/advance stream: both fills stay
+    bit-identical in rates, completion order and completion times."""
+    rng = random.Random(3000 + seed)
+    n_nodes = rng.randint(2, 6)
+    heap_fm, scan_fm = _pair(n_nodes)
+    nodes = list(range(n_nodes))
+    live: list[int] = []
+    next_node = n_nodes
+    done_h: list[int] = []
+    done_s: list[int] = []
+    for _ in range(60):
+        op = rng.random()
+        if op < 0.45 or not live:
+            if len(nodes) >= 2:
+                src, dst = rng.sample(nodes, 2)
+                links = (("dr", src), ("up", src), ("down", dst),
+                         ("dw", dst))
+                nbytes = rng.choice([0.0, 1.0, 500.0, 12_345.6789])
+                fh = heap_fm.add(links, nbytes, "t")
+                fs = scan_fm.add(links, nbytes, "t")
+                assert fh.id == fs.id
+                live.append(fh.id)
+        elif op < 0.60:
+            fid = live.pop(rng.randrange(len(live)))
+            heap_fm.remove(fid)
+            scan_fm.remove(fid)
+        elif op < 0.70 and len(nodes) > 2:
+            # node failure: drop every flow crossing the node (engine path)
+            node = rng.choice(nodes)
+            nodes.remove(node)
+            assert heap_fm.flows_on_node(node) == scan_fm.flows_on_node(node)
+            for fid in scan_fm.flows_on_node(node):
+                assert heap_fm.unsent(fid) == scan_fm.unsent(fid)
+                heap_fm.remove(fid)
+                scan_fm.remove(fid)
+                if fid in live:
+                    live.remove(fid)
+        elif op < 0.78:
+            # elastic join: fresh links become available
+            for kind, bw in (("up", 100.0), ("down", 100.0),
+                             ("dr", 537.0), ("dw", 402.0)):
+                heap_fm.capacities[(kind, next_node)] = bw
+                scan_fm.capacities[(kind, next_node)] = bw
+            nodes.append(next_node)
+            next_node += 1
+        else:
+            heap_fm.recompute()
+            scan_fm.recompute()
+            dt, _ = scan_fm.next_completion()
+            if dt != math.inf:
+                # advance past the next completion or partially into it
+                step = dt * rng.choice([0.5, 1.0, 1.0])
+                done_h.extend(f.id for f in heap_fm.advance(step))
+                done_s.extend(f.id for f in scan_fm.advance(step))
+                assert done_h == done_s
+        heap_fm.recompute()
+        scan_fm.recompute()
+        _assert_state_equal(heap_fm, scan_fm)
+    # drain both to completion
+    while scan_fm.flows:
+        dt, _ = scan_fm.next_completion()
+        if dt == math.inf:
+            break
+        done_h.extend(f.id for f in heap_fm.advance(dt))
+        done_s.extend(f.id for f in scan_fm.advance(dt))
+        heap_fm.recompute()
+        scan_fm.recompute()
+    assert done_h == done_s
+
+
+# ------------------------------------------------------ whole-simulation runs
+def _sim(cfg, strategy="wow", failure=False):
+    wf = make_workflow("group", scale=0.3)
+    sim = Simulation(wf, cfg, strategy)
+    if failure:
+        sim.schedule_failure(30.0, node=0)
+        sim.schedule_join(45.0, node_id=8)
+    res = sim.run()
+    return sim, res
+
+
+@pytest.mark.parametrize("strategy", ["orig", "cws", "wow"])
+@pytest.mark.parametrize("failure", [False, True])
+def test_sim_equivalence_heap_vs_scan(strategy, failure):
+    sim_h, res_h = _sim(SimConfig(flow_fill="heap"), strategy, failure)
+    sim_s, res_s = _sim(SimConfig(flow_fill="scan"), strategy, failure)
+    assert sim_h.action_log == sim_s.action_log
+    assert res_h.makespan == res_s.makespan
+    assert res_h.network_bytes == res_s.network_bytes
+    assert res_h.sim_steps == res_s.sim_steps
+    assert res_h.flow_recomputes == res_s.flow_recomputes
+    assert res_h.flow_mean_component == res_s.flow_mean_component
+
+
+def test_unknown_fill_rejected():
+    with pytest.raises(ValueError):
+        FlowManager({}, fill="quantum")
+    with pytest.raises(ValueError):
+        _sim(SimConfig(flow_fill="quantum"))
+
+
+# -------------------------------------------------------- health counters
+def test_flow_health_counters_surface_in_simresult():
+    _, res = _sim(SimConfig())
+    assert res.sim_steps > 0
+    assert res.flow_recomputes > 0
+    assert res.flow_mean_component > 0.0
+    assert res.flow_compactions >= 0
+    row = res.row()
+    for key in ("sim_steps", "flow_recomputes", "flow_compactions",
+                "flow_mean_component"):
+        assert key in row
+
+
+def test_flow_health_counters_zero_on_reference_manager():
+    # the frozen ReferenceFlowManager carries no counters; the engine must
+    # still produce a well-formed result
+    _, res = _sim(SimConfig(reference_flow=True))
+    assert res.flow_recomputes == 0
+    assert res.flow_mean_component == 0.0
+
+
+def test_sim_throughput_scenario_rows_and_headline():
+    """The benchmark scenario must produce per-(strategy, fill) rows with
+    events/sec + health counters and a headline with the sim_speedup keys
+    CI asserts on, at a toy size."""
+    from benchmarks.scheduler_scale import run_sim_throughput
+    rows, head = run_sim_throughput(sizes=[(8, 0.08)])
+    assert {r["impl"] for r in rows} == {"orig", "cws", "wow"}
+    assert {r["fill"] for r in rows} == {"heap", "scan"}
+    for r in rows:
+        assert r["scenario"] == "sim_throughput"
+        for key in ("wall_s", "events", "events_per_s", "makespan",
+                    "flow_recomputes", "flow_compactions",
+                    "flow_mean_component"):
+            assert key in r, f"row missing {key}"
+    assert head["workflow"] == "group"
+    assert head["sim_speedup_nodes"] == 8
+    assert head["sim_speedup"] is not None and head["sim_speedup"] > 0
+    assert set(head["speedups"]["8"]) == {"orig", "cws", "wow"}
+
+
+def test_mean_component_tracks_fill_scope():
+    caps = build_links(4, net_bw=100.0, disk_read_bw=537.0,
+                       disk_write_bw=402.0)
+    fm = FlowManager(caps)
+    fm.add((("up", 0), ("down", 1)), 100.0, "a")
+    fm.add((("up", 2), ("down", 3)), 100.0, "b")
+    fm.recompute()                       # one recompute, both flows dirty
+    assert fm.recomputes == 1
+    assert fm.mean_component == 2.0
+    fm.add((("up", 0), ("down", 3)), 100.0, "c")
+    fm.recompute()                       # welds everything into one comp
+    assert fm.recomputes == 2
+    assert fm.health()["mean_component"] == pytest.approx((2 + 3) / 2)

@@ -21,8 +21,8 @@ import pytest
 
 from repro.core import (CapacityClasses, DataPlacementService, FileSpec,
                         NodeOrder, NodeState, ReadySet,
-                        ReferenceWowScheduler, StartCop, StartTask, TaskSpec,
-                        WowScheduler)
+                        ReferenceWowScheduler, ShapeIndex, StartCop,
+                        StartTask, TaskSpec, WowScheduler)
 from repro.sim import SimConfig, Simulation
 from repro.workloads import make_workflow
 
@@ -353,6 +353,114 @@ def test_inputless_fast_path_parity_with_reference(seed):
     (and its joint-solve fallback on mixed events) must keep decisions
     bit-identical to the reference scheduler."""
     _drive_mixed_pair(seed)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_shape_index_matches_bruteforce(seed):
+    """ShapeIndex buckets == from-scratch grouping + sort of a shadow dict
+    under random add/discard/resubmit streams."""
+    rng = random.Random(700 + seed)
+    idx = ShapeIndex()
+    shadow: dict[int, tuple[int, float, float]] = {}  # tid -> mem,cores,prio
+    shapes = [(2 * GiB, 2.0), (2 * GiB, 4.0), (6 * GiB, 2.0)]
+    for step in range(200):
+        op = rng.random()
+        tid = rng.randrange(40)
+        if op < 0.55:
+            mem, cores = rng.choice(shapes)
+            prio = rng.choice([1.0, 2.5, 2.5, rng.uniform(0, 10)])
+            idx.add(tid, mem, cores, prio)      # resubmission replaces
+            shadow[tid] = (mem, cores, prio)
+        else:
+            idx.discard(tid)                    # idempotent
+            shadow.pop(tid, None)
+        assert len(idx) == len(shadow)
+        groups: dict[tuple, list] = {}
+        for t, (m, c, p) in shadow.items():
+            groups.setdefault((m, c), []).append((-p, t))
+        assert set(idx.shapes()) == set(groups)
+        for shape, expect in groups.items():
+            assert idx.group(shape) == sorted(expect)
+            assert idx.tasks_of(shape) == [t for _, t in sorted(expect)]
+        for t in shadow:
+            assert t in idx
+            assert idx.shape_of(t) == shadow[t][:2]
+
+
+def _drive_inputless_pair(seed, n_nodes, steps, shapes, n_ready=0):
+    """Pure input-less streams (optionally pre-filled backlog) replayed
+    against both scheduler cores; multiple shapes exercise the multi-shape
+    fallback, a large single-shape backlog the uniform greedy branch."""
+    nodes_a = {i: NodeState(i, 8 * GiB, 8.0) for i in range(n_nodes)}
+    nodes_b = {i: NodeState(i, 8 * GiB, 8.0) for i in range(n_nodes)}
+    new = WowScheduler(nodes_a, DataPlacementService(seed=seed))
+    ref = ReferenceWowScheduler(nodes_b, DataPlacementService(seed=seed))
+    rng = random.Random(seed)
+    next_task = 0
+
+    def submit():
+        nonlocal next_task
+        mem, cores = rng.choice(shapes)
+        prio = rng.choice([rng.uniform(1, 10), 5.0])   # priority ties too
+        for sched in (new, ref):
+            sched.submit(TaskSpec(id=next_task, abstract="a", mem=mem,
+                                  cores=cores, inputs=(), priority=prio))
+        next_task += 1
+
+    for _ in range(n_ready):
+        submit()
+    for step in range(steps):
+        op = rng.randrange(4)
+        if op in (0, 1):
+            submit()
+        elif op == 2 and new.running:
+            tid = rng.choice(sorted(new.running))
+            assert new.running[tid] == ref.running[tid]
+            new.on_task_finished(tid, new.running[tid])
+            ref.on_task_finished(tid, ref.running[tid])
+        a_new = _summarize(new.schedule())
+        a_ref = _summarize(ref.schedule())
+        assert a_new == a_ref, f"diverged at step {step}"
+    return new
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_inputless_multi_shape_parity_with_reference(seed):
+    """2-3 distinct shapes whose fitting-node sets overlap: the shape
+    components collapse to one, taking the generic (cached ilp.solve)
+    tier -- decisions must match the reference exactly."""
+    _drive_inputless_pair(seed, n_nodes=5, steps=50,
+                          shapes=[(2 * GiB, 2.0), (2 * GiB, 4.0),
+                                  (6 * GiB, 6.0)])
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_inputless_uniform_greedy_parity_with_reference(seed):
+    """A single-shape backlog past the exact gate (> 24 tasks, > 64
+    candidate slots): the analytic uniform fast path must reproduce the
+    reference's greedy assignment bit-for-bit."""
+    sched = _drive_inputless_pair(seed, n_nodes=16, steps=25,
+                                  shapes=[(3 * GiB, 3.0)], n_ready=60)
+    assert sched.inputless_stats["fast_solves"] > 0, (
+        "uniform fast path never fired -- gate sizing drifted?")
+
+
+def test_inputless_fingerprint_cache_hits_recurring_fanout():
+    """Steady-state fan-out with quantized priorities: after a task of a
+    shape is placed, finishes, and an identical task (same shape/priority,
+    same id rank, same node capacities) arrives, the capacity subproblem
+    is id-relative-isomorphic to the previous event's -- the fingerprint
+    cache must answer it without re-solving."""
+    nodes = {0: NodeState(0, 8 * GiB, 8.0)}
+    sched = WowScheduler(nodes, DataPlacementService())
+    for tid in (100, 101):
+        sched.submit(TaskSpec(id=tid, abstract="a", mem=8 * GiB, cores=8.0,
+                              inputs=(), priority=5.0))
+        actions = sched.schedule()
+        assert _summarize(actions) == [("task", tid, 0)]
+        sched.on_task_finished(tid, 0)
+    assert sched.inputless_stats["cache_misses"] == 1
+    assert sched.inputless_stats["cache_hits"] == 1
 
 
 def test_inputless_fast_path_exercised():
