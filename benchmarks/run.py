@@ -5,13 +5,23 @@ framework-side benches.  Prints ``name,...`` CSV lines and collects every
 
     PYTHONPATH=src python -m benchmarks.run [--only table2,table3,...]
     PYTHONPATH=src python -m benchmarks.run --report   # report only
+    PYTHONPATH=src python -m benchmarks.run --only scheduler --profile
+                                           # + cProfile per scenario
+
+``--profile`` wraps each selected scenario in cProfile and writes the
+top-``--profile-top`` functions by cumulative time to
+``BENCH_profile.json`` (picked up by the report aggregator like every
+other ``BENCH_*.json``), so "what is the top non-fill cost now?" is one
+flag away instead of an ad-hoc script.
 """
 from __future__ import annotations
 
 import argparse
+import cProfile
 import glob
 import json
 import os
+import pstats
 import time
 
 
@@ -34,6 +44,28 @@ def roofline_summary(dryrun_dir: str = "experiments/dryrun") -> None:
               f"{rl['compute_s'] * 1e3:.1f},{rl['memory_s'] * 1e3:.1f},"
               f"{rl['collective_s'] * 1e3:.1f},{rl['bottleneck']},"
               f"{rl['useful_ratio']:.2f},{rl['peak_fraction']:.4f}")
+
+
+# ------------------------------------------------------------- profiling
+def profile_call(name: str, fn, top_n: int = 15) -> list[dict]:
+    """Run ``fn()`` under cProfile; return the top ``top_n`` functions by
+    cumulative time as report rows (and echo them as CSV lines)."""
+    prof = cProfile.Profile()
+    prof.enable()
+    try:
+        fn()
+    finally:
+        prof.disable()
+    stats = pstats.Stats(prof)
+    rows: list[dict] = []
+    print(f"profile,{name},ncalls,tottime_s,cumtime_s,function")
+    for (fn_file, fn_line, fn_name), (cc, nc, tt, ct, _callers) in sorted(
+            stats.stats.items(), key=lambda kv: -kv[1][3])[:top_n]:
+        loc = f"{os.path.basename(fn_file)}:{fn_line}:{fn_name}"
+        rows.append({"scenario": name, "function": loc, "ncalls": nc,
+                     "tottime_s": round(tt, 4), "cumtime_s": round(ct, 4)})
+        print(f"profile,{name},{nc},{tt:.3f},{ct:.3f},{loc}")
+    return rows
 
 
 # ----------------------------------------------------------- report writing
@@ -148,6 +180,11 @@ def main() -> None:
     ap.add_argument("--report", action="store_true",
                     help="only regenerate BENCH_REPORT.md from existing "
                          "BENCH_*.json files")
+    ap.add_argument("--profile", action="store_true",
+                    help="wrap each selected scenario in cProfile and write "
+                         "the top cumulative rows to BENCH_profile.json")
+    ap.add_argument("--profile-top", type=int, default=15,
+                    help="rows kept per profiled scenario (default 15)")
     args = ap.parse_args()
     if args.report:
         if aggregate_report() is None:
@@ -158,27 +195,44 @@ def main() -> None:
     def want(name: str) -> bool:
         return only is None or name in only
 
+    profile_rows: list[dict] = []
+
+    def run_scenario(name: str, fn) -> None:
+        if args.profile:
+            profile_rows.extend(profile_call(name, fn,
+                                             top_n=args.profile_top))
+        else:
+            fn()
+
     t0 = time.time()
     if want("table2"):
         from .table2_execution import main as t2
-        t2()
+        run_scenario("table2", t2)
     if want("table3"):
         from .table3_network import main as t3
-        t3()
+        run_scenario("table3", t3)
     if want("fig4"):
         from .fig4_overhead import main as f4
-        f4()
+        run_scenario("fig4", f4)
     if want("fig5"):
         from .fig5_scaling import main as f5
-        f5()
+        run_scenario("fig5", f5)
     if want("scheduler"):
         from .scheduler_scale import main as ss
-        ss()
+        run_scenario("scheduler", ss)
     if want("kernels"):
         from .kernels import main as km
-        km()
+        run_scenario("kernels", km)
     if want("roofline"):
         roofline_summary()
+    if args.profile and profile_rows:
+        from .common import write_json
+        write_json("profile", {
+            "rows": profile_rows,
+            "top_n": args.profile_top,
+            "note": "top functions by cumulative time per scenario, "
+                    "collected by `python -m benchmarks.run --profile`",
+        })
     aggregate_report()
     print(f"benchmarks,total_wall_s,{time.time() - t0:.1f}")
 

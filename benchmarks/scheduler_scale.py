@@ -51,10 +51,22 @@ Two further scenarios cover this PR's other step-1 paths:
   minutes, which is precisely the regression this scenario guards against.
   ``BENCH_SMOKE=1`` restricts the scenario to the smallest size so CI
   stays fast (full-scale rows are a local/nightly tier).
+* ``run_sampled_recompute`` -- per-event recompute latency at
+  4096/16384/65536 nodes via *sampled-recompute timing*: instead of whole
+  runs (unaffordable past 4096 for the dict path) it times a fixed sample
+  of schedule() recomputes against a jittered busy-cluster snapshot, for
+  the vectorized ``NodeCapacityArray`` path, the PR-5 dict path and the
+  frozen reference, asserting the action streams stay bit-identical.
+  Headline keys ``sampled_recompute`` / ``scale_speedup``.
+* ``run_e2e_vectorized`` -- full wow runs with ``vectorized=False`` vs
+  ``True`` (bit-identical action log + makespan asserted), recording the
+  end-to-end before/after of the vectorized hot state.  Headline key
+  ``e2e_vectorized``.
 
 Results land in BENCH_scheduler_scale.json; headline numbers are the
 sustained speedup and the phase times on the (1024 nodes, 4096 ready
-tasks) row.
+tasks) row, plus ``scale_speedup`` (dict/vectorized per-recompute ratio
+at 4096 nodes).
 """
 from __future__ import annotations
 
@@ -64,7 +76,7 @@ import random
 import time
 
 import repro.core.reference as _reference
-from repro.core import (DataPlacementService, FileSpec,
+from repro.core import (HAVE_NUMPY, DataPlacementService, FileSpec,
                         IncrementalAssignmentSolver, NodeState,
                         ReferenceWowScheduler, TaskSpec, WowScheduler)
 from repro.core.ilp import AssignmentProblem, objective
@@ -379,6 +391,204 @@ def run_dfs_churn(fail_t: float = 30.0, fail_node: int = 1) -> dict:
     return out
 
 
+# --------------------------------------- sampled-recompute at extreme scale
+# Timing whole runs past 4096 nodes is unaffordable (the dict path alone
+# would take hours at 65536), so this scenario times a *fixed sample of
+# recompute events* against a synthetic mid-run cluster snapshot instead:
+#
+# * every node is partially busy with jittered free capacities, so the dict
+#   ``CapacityClasses`` degenerates to ~one class per node and each fitting
+#   query walks (and sorts) O(n) entries -- the regime the vectorized
+#   ``NodeCapacityArray`` replaces with one masked argwhere pass;
+# * each sampled event submits ``RECOMP_K`` input-less tasks (the fan-out
+#   shape that dominates large waves), times one ``schedule()`` recompute,
+#   then finishes the placed tasks so the snapshot returns to steady state.
+#
+# Rows cover the vectorized path, the PR-5 dict path (``vectorized=False``)
+# and the frozen reference (few samples; capped at
+# ``_RECOMP_REFERENCE_MAX_NODES`` -- its per-event rebuild is O(n) per ready
+# task).  The three paths consume one shared RNG schedule, and the bench
+# asserts the per-event action streams are bit-identical (dict == vectorized
+# in full; reference as a prefix).  Headline keys
+# ``sampled_recompute_ms_*`` and ``scale_speedup`` (dict/vectorized at
+# ``_RECOMP_HEADLINE_NODES``).
+RECOMP_SIZES = [4096, 16384, 65536]
+RECOMP_SMOKE_SIZES = [512]
+RECOMP_K = 32                       # tasks per sampled recompute event
+RECOMP_SAMPLES = {"vectorized": 20, "dict": 20, "reference": 3}
+_RECOMP_REFERENCE_MAX_NODES = 16384
+_RECOMP_HEADLINE_NODES = 4096
+
+
+def build_busy(n_nodes: int, cls, seed: int = 0, vectorized=None):
+    """A mid-run cluster snapshot: every node partially busy with jittered
+    free capacities (distinct (free_mem, free_cores) pairs => ~one dict
+    capacity class per node), every node still fitting the probe shape (so
+    candidate lists stay O(n), like a real half-loaded wave)."""
+    rng = random.Random(seed)
+    nodes: dict[int, NodeState] = {}
+    for i in range(n_nodes):
+        s = NodeState(i, 128 * GiB, 16.0)
+        s.free_mem = (48 + rng.randrange(0, 33)) * GiB
+        s.free_cores = 6.0 + 0.5 * rng.randrange(0, 13)
+        nodes[i] = s
+    dps = DataPlacementService(seed=seed)
+    if cls is WowScheduler:
+        return cls(nodes, dps, vectorized=vectorized), rng
+    return cls(nodes, dps), rng
+
+
+def _sampled_recompute_one(n_nodes: int, impl: str, samples: int,
+                           seed: int = 0) -> dict:
+    """Time ``samples`` recompute events (plus one unmeasured warm-up) and
+    return per-event ms and the summarized action stream for the parity
+    assertion."""
+    if impl == "reference":
+        sched, rng = build_busy(n_nodes, ReferenceWowScheduler, seed)
+    else:
+        sched, rng = build_busy(n_nodes, WowScheduler, seed,
+                                vectorized=(impl == "vectorized"))
+    next_id = 0
+    log: list[list] = []
+    total = 0.0
+    for i in range(samples + 1):
+        for _ in range(RECOMP_K):
+            sched.submit(TaskSpec(id=next_id, abstract="a", mem=TASK_MEM,
+                                  cores=TASK_CORES, inputs=(),
+                                  priority=rng.uniform(1, 10)))
+            next_id += 1
+        t0 = time.perf_counter()
+        actions = sched.schedule()
+        dt = time.perf_counter() - t0
+        if i > 0:                       # warm-up event is unmeasured
+            total += dt
+        log.append(_summarize(actions))
+        for tid in list(sched.running):
+            sched.on_task_finished(tid, sched.running[tid])
+    return {"ms_per_recompute": total * 1000 / samples, "log": log}
+
+
+def run_sampled_recompute(sizes: list[int] | None = None,
+                          ) -> tuple[list[dict], dict]:
+    """Sampled-recompute timing per cluster size; returns (rows, headline)."""
+    if sizes is None:
+        sizes = RECOMP_SMOKE_SIZES if bench_smoke() else RECOMP_SIZES
+    rows: list[dict] = []
+    speedups: dict[int, float] = {}
+    per_size_ms: dict[int, dict[str, float]] = {}
+    emit("scheduler_scale,sampled_recompute,impl,nodes,k,samples,"
+         "ms_per_recompute")
+    for n_nodes in sizes:
+        res: dict[str, dict] = {}
+        for impl in ("vectorized", "dict", "reference"):
+            if impl == "vectorized" and not HAVE_NUMPY:
+                continue
+            if impl == "reference" and n_nodes > _RECOMP_REFERENCE_MAX_NODES:
+                continue
+            samples = RECOMP_SAMPLES[impl]
+            res[impl] = _sampled_recompute_one(n_nodes, impl, samples)
+            rows.append({"impl": impl, "scenario": "sampled_recompute",
+                         "nodes": n_nodes, "k": RECOMP_K, "samples": samples,
+                         "ms_per_recompute": res[impl]["ms_per_recompute"]})
+            emit(f"scheduler_scale,sampled_recompute,{impl},{n_nodes},"
+                 f"{RECOMP_K},{samples},"
+                 f"{res[impl]['ms_per_recompute']:.3f}")
+        # bit-parity across paths on the shared event schedule
+        if "vectorized" in res:
+            assert res["vectorized"]["log"] == res["dict"]["log"], (
+                f"sampled_recompute@{n_nodes}: vectorized path diverged "
+                f"from the dict path")
+            if "reference" in res:
+                k = len(res["reference"]["log"])
+                assert res["reference"]["log"] == res["dict"]["log"][:k], (
+                    f"sampled_recompute@{n_nodes}: dict path diverged from "
+                    f"the reference")
+            speedups[n_nodes] = (res["dict"]["ms_per_recompute"]
+                                 / max(res["vectorized"]["ms_per_recompute"],
+                                       1e-9))
+        per_size_ms[n_nodes] = {i: r["ms_per_recompute"]
+                                for i, r in res.items()}
+    head_nodes = (_RECOMP_HEADLINE_NODES
+                  if _RECOMP_HEADLINE_NODES in speedups
+                  else (max(speedups) if speedups else None))
+    scale_speedup = speedups.get(head_nodes) if head_nodes else None
+    if scale_speedup is not None:
+        emit(f"scheduler_scale,scale_speedup_{head_nodes}n,"
+             f"{scale_speedup:.1f}x")
+    headline = {
+        "k": RECOMP_K,
+        "sizes": sizes,
+        "ms_per_recompute": {str(n): ms
+                             for n, ms in sorted(per_size_ms.items())},
+        "speedups": {str(n): sp for n, sp in sorted(speedups.items())},
+        "scale_speedup_nodes": head_nodes,
+        "scale_speedup": scale_speedup,
+    }
+    return rows, headline
+
+
+# ------------------------------------- end-to-end vectorization before/after
+# Tentpole part 4: the e2e profile at 4096 nodes showed ``schedule()`` is
+# ~84% of a full wow run (cold ``_greedy_uniform`` + the step-2 scan/sort),
+# so the measured fix for the top non-fill cost *is* the vectorized hot
+# state plus the shared step-2 micro-fixes.  This scenario records the
+# before/after: one full wow run per size with ``vectorized=False`` (the
+# PR-5 path, all shared fixes included) vs ``vectorized=True``, asserting
+# the action log and makespan are bit-identical.  Headline key
+# ``e2e_vectorized`` with ``e2e_speedup`` at the largest size.
+E2E_SIZES = [(1024, 10.24), (4096, 20.48)]
+E2E_SMOKE_SIZES = [(128, 1.28)]
+
+
+def run_e2e_vectorized(sizes: list[tuple[int, float]] | None = None,
+                       ) -> tuple[list[dict], dict]:
+    from repro.sim import SimConfig, Simulation
+    from repro.workloads import make_workflow
+
+    if sizes is None:
+        sizes = E2E_SMOKE_SIZES if bench_smoke() else E2E_SIZES
+    rows: list[dict] = []
+    speedups: dict[int, float] = {}
+    emit("scheduler_scale,e2e_vectorized,nodes,vectorized,wall_s,makespan")
+    for n_nodes, scale in sizes:
+        walls: dict[bool, float] = {}
+        logs: dict[bool, list] = {}
+        makespans: dict[bool, float] = {}
+        for vec in ([False, True] if HAVE_NUMPY else [False]):
+            wf = make_workflow(SIM_WORKFLOW, scale=scale)
+            cfg = SimConfig(n_nodes=n_nodes, dfs="ceph", vectorized=vec)
+            sim = Simulation(wf, cfg, "wow")
+            t0 = time.perf_counter()
+            r = sim.run()
+            walls[vec] = time.perf_counter() - t0
+            logs[vec] = sim.action_log
+            makespans[vec] = r.makespan
+            rows.append({"impl": "vectorized" if vec else "dict",
+                         "scenario": "e2e_vectorized", "nodes": n_nodes,
+                         "tasks": r.tasks_total, "wall_s": walls[vec],
+                         "makespan": r.makespan})
+            emit(f"scheduler_scale,e2e_vectorized,{n_nodes},{vec},"
+                 f"{walls[vec]:.2f},{r.makespan:.2f}")
+        if True in walls:
+            assert logs[True] == logs[False], (
+                f"e2e_vectorized@{n_nodes}: action log diverged")
+            assert makespans[True] == makespans[False], (
+                f"e2e_vectorized@{n_nodes}: makespan diverged")
+            speedups[n_nodes] = walls[False] / max(walls[True], 1e-9)
+    head_nodes = max(speedups) if speedups else None
+    e2e_speedup = speedups.get(head_nodes) if head_nodes else None
+    if e2e_speedup is not None:
+        emit(f"scheduler_scale,e2e_speedup_{head_nodes}n,{e2e_speedup:.1f}x")
+    headline = {
+        "workflow": SIM_WORKFLOW,
+        "sizes": [n for n, _ in sizes],
+        "speedups": {str(n): sp for n, sp in sorted(speedups.items())},
+        "e2e_speedup_nodes": head_nodes,
+        "e2e_speedup": e2e_speedup,
+    }
+    return rows, headline
+
+
 # ------------------------------------------------- warm-start (declined RM)
 def run_warmstart(n_nodes: int = 6, n_tasks: int = 10, iters: int = 60,
                   seed: int = 0) -> dict:
@@ -543,6 +753,14 @@ def main() -> list[dict]:
     sim_rows, sim_head = run_sim_throughput()
     rows.extend(sim_rows)
 
+    # sampled-recompute timing at extreme scale (vectorized vs dict vs ref)
+    rec_rows, rec_head = run_sampled_recompute()
+    rows.extend(rec_rows)
+
+    # full-run before/after of the vectorized hot state (bit-parity asserted)
+    e2e_rows, e2e_head = run_e2e_vectorized()
+    rows.extend(e2e_rows)
+
     # warm start on the declined-placement path (harness-only)
     warm = run_warmstart()
     rows.append({"impl": "incremental-solver", "scenario": "warmstart_declined",
@@ -578,6 +796,9 @@ def main() -> list[dict]:
                      "inputless_speedup": inputless_speedup,
                      "inputless_stats": less["indexed"]["inputless_stats"],
                      "sim_throughput": sim_head,
+                     "sampled_recompute": rec_head,
+                     "scale_speedup": rec_head["scale_speedup"],
+                     "e2e_vectorized": e2e_head,
                      "warmstart": warm,
                      "dfs_churn": churn,
                      "solver_stats": headline_stats},

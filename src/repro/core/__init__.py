@@ -8,6 +8,7 @@ from .ilp import (AssignmentProblem, FingerprintCache,
                   IncrementalAssignmentSolver, component_fingerprint,
                   decompose, solve, solve_exact, solve_greedy,
                   solve_monolithic)
+from .nodearray import (HAVE_NUMPY, ArrayCapacityClasses, NodeCapacityArray)
 from .priority import abstract_ranks, assign_priorities, priority_value
 from .readyset import CapacityClasses, NodeOrder, ReadySet, ShapeIndex
 from .reference import ReferenceWowScheduler
@@ -16,9 +17,10 @@ from .types import (Action, CopPlan, DFS_LOC, FileSpec, NodeState, StartCop,
                     StartTask, TaskSpec, Transfer)
 
 __all__ = [
-    "Action", "AssignmentProblem", "CapacityClasses", "CopPlan", "DFS_LOC",
-    "DataPlacementService", "FileSpec", "FingerprintCache",
-    "IncrementalAssignmentSolver", "NodeOrder", "NodeState", "ReadySet",
+    "Action", "ArrayCapacityClasses", "AssignmentProblem", "CapacityClasses",
+    "CopPlan", "DFS_LOC", "DataPlacementService", "FileSpec",
+    "FingerprintCache", "HAVE_NUMPY", "IncrementalAssignmentSolver",
+    "NodeCapacityArray", "NodeOrder", "NodeState", "ReadySet",
     "ReferenceWowScheduler", "ShapeIndex", "StartCop", "StartTask",
     "TaskSpec", "Transfer", "WowScheduler", "abstract_ranks",
     "assign_priorities", "component_fingerprint", "decompose",

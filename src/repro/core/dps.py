@@ -316,6 +316,23 @@ class DataPlacementService:
         return (self._task_bytes[task_id]
                 - self._present_bytes[task_id].get(node, 0))
 
+    def prepared_node_set(self, task_id: int) -> frozenset | set:
+        """Live prepared-node set of the (tracked) task -- the hot-path set
+        form of :meth:`is_prepared_task` for callers filtering many nodes
+        at once.  Read-only: callers must not mutate it."""
+        return self._prep.get(task_id, _EMPTY)
+
+    def task_input_bytes(self, task_id: int) -> int:
+        """Total input bytes of the (tracked) task."""
+        return self._task_bytes[task_id]
+
+    def present_bytes_map(self, task_id: int) -> dict:
+        """Live ``{node: bytes already present}`` of the (tracked) task
+        (empty for tasks with no replica anywhere; with it and
+        :meth:`task_input_bytes` callers batch-compute missing bytes
+        without a method call per node).  Read-only."""
+        return self._present_bytes[task_id]
+
     def tasks_prepared_on(self, node: NodeId) -> set[int]:
         # copy: handing out the live index would let callers corrupt it
         return set(self._node_prep_tasks.get(node, _EMPTY))

@@ -91,21 +91,40 @@ class AssignmentProblem:
     tasks: list[TaskSpec]                      # candidate tasks (T_run)
     prepared: dict[int, list[int]]             # task id -> node ids (N_prep with free res.)
     nodes: dict[int, NodeState]
+    # optional core.nodearray.NodeCapacityArray mirroring `nodes` (the
+    # scheduler's vectorized hot state): candidate filtering then runs as
+    # masked array gathers on the same values -- decisions identical
+    cap: object | None = None
+
+# Below this candidate-list length the per-element dict/attribute compare
+# beats the numpy gather setup cost; tiny lists (the common incremental
+# component) keep the plain loop.
+_MASK_MIN_CANDS = 16
 
 
 def _feasible(problem: AssignmentProblem) -> AssignmentProblem:
-    """Drop tasks with no prepared node that currently fits them."""
+    """Drop tasks with no prepared node that currently fits them.  With a
+    capacity array attached, long candidate lists are filtered by one
+    masked gather (`NodeCapacityArray.filter_fitting`, same values and
+    order as the dict compare -- and no copy at all when everything fits,
+    the common case for lists built from `fitting`)."""
     tasks, prepared = [], {}
+    cap = problem.cap
+    nodes = problem.nodes
     for t in problem.tasks:
-        cands = [
-            n for n in problem.prepared.get(t.id, [])
-            if problem.nodes[n].free_mem >= t.mem
-            and problem.nodes[n].free_cores >= t.cores
-        ]
+        cand0 = problem.prepared.get(t.id, [])
+        if cap is not None and len(cand0) >= _MASK_MIN_CANDS:
+            cands = cap.filter_fitting(cand0, t.mem, t.cores)
+        else:
+            cands = [
+                n for n in cand0
+                if nodes[n].free_mem >= t.mem
+                and nodes[n].free_cores >= t.cores
+            ]
         if cands:
             tasks.append(t)
             prepared[t.id] = cands
-    return AssignmentProblem(tasks, prepared, problem.nodes)
+    return AssignmentProblem(tasks, prepared, problem.nodes, cap)
 
 
 def solve_exact(problem: AssignmentProblem,
@@ -199,8 +218,12 @@ def solve_greedy(problem: AssignmentProblem) -> dict[int, int]:
     """
     p = _feasible(problem)
     tasks = sorted(p.tasks, key=lambda t: (-t.priority, t.id))
-    free_mem = {n.id: n.free_mem for n in p.nodes.values()}
-    free_cores = {n.id: n.free_cores for n in p.nodes.values()}
+    # only candidate-referenced nodes are ever indexed below; restricting
+    # the free dicts to them drops an O(all nodes) walk for callers that
+    # pass the full node dict
+    n_ids = {n for cands in p.prepared.values() for n in cands}
+    free_mem = {n: p.nodes[n].free_mem for n in n_ids}
+    free_cores = {n: p.nodes[n].free_cores for n in n_ids}
     assign: dict[int, int] = {}
 
     def try_place(t: TaskSpec) -> bool:
@@ -338,7 +361,8 @@ def decompose(problem: AssignmentProblem) -> list[AssignmentProblem]:
     """Split a problem into independent subproblems (public diagnostic API;
     `solve` uses the same partition internally)."""
     p = _feasible(problem)
-    return [AssignmentProblem(tasks, cand, {n: p.nodes[n] for n in node_ids})
+    return [AssignmentProblem(tasks, cand, {n: p.nodes[n] for n in node_ids},
+                              p.cap)
             for tasks, cand, node_ids in _components(p)]
 
 
@@ -346,11 +370,12 @@ def _solve_component(tasks: list[TaskSpec], cand: dict[int, list[int]],
                      nodes: dict[int, NodeState],
                      seed: dict[int, int] | None = None,
                      node_budget: int = _EXACT_NODE_BUDGET,
+                     cap: object | None = None,
                      ) -> tuple[dict[int, int], str]:
     """One component: exact when small (per-component gate), else greedy.
     Returns (assignment, tier) with tier in {"exact", "greedy", "aborted"}.
     ``cand`` lists must already be filtered to currently-fitting nodes."""
-    prob = AssignmentProblem(tasks, cand, nodes)
+    prob = AssignmentProblem(tasks, cand, nodes, cap)
     n_cand = sum(len(v) for v in cand.values())
     if exact_gate(len(tasks), n_cand):
         exact = solve_exact(prob, node_budget, incumbent=seed)
@@ -374,7 +399,7 @@ def solve(problem: AssignmentProblem) -> dict[int, int]:
     assign: dict[int, int] = {}
     for tasks, cand, node_ids in _components(p):
         sub, _tier = _solve_component(
-            tasks, cand, {n: p.nodes[n] for n in node_ids})
+            tasks, cand, {n: p.nodes[n] for n in node_ids}, cap=p.cap)
         assign.update(sub)
     return assign
 
@@ -473,8 +498,10 @@ class IncrementalAssignmentSolver:
     """
 
     def __init__(self, nodes: dict[int, NodeState], *,
-                 strict_parity: bool = True, cache_size: int = 2048) -> None:
+                 strict_parity: bool = True, cache_size: int = 2048,
+                 cap: object | None = None) -> None:
         self.nodes = nodes
+        self.cap = cap          # optional NodeCapacityArray mirror of nodes
         self.strict_parity = strict_parity
         self._cache = FingerprintCache(cache_size)
         self._comp_tasks: dict[int, list[int]] = {}    # cid -> tids (seq order)
@@ -587,7 +614,8 @@ class IncrementalAssignmentSolver:
             seed = self._warm_seed(tids, tasks, cand, prev)
         t_specs = [tasks[t] for t in tids]
         node_states = {n: self.nodes[n] for n in nlist}
-        assign, tier = _solve_component(t_specs, cand, node_states, seed=seed)
+        assign, tier = _solve_component(t_specs, cand, node_states, seed=seed,
+                                        cap=self.cap)
         if tier == "exact":
             self.stats["exact_solves"] += 1
         else:

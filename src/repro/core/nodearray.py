@@ -1,0 +1,275 @@
+"""Vectorized hot node state: contiguous arrays of per-node free capacity.
+
+At 4096+ nodes the scheduler's dominant per-event cost is walking the
+per-node hot state (``NodeState.free_mem``/``free_cores``, COP slots) one
+dict entry at a time: capacity-class walks in ``readyset.CapacityClasses``,
+the step-2/3 free-slot pool scans and the input-less best-fit loops all
+touch O(nodes) Python objects per event.  :class:`NodeCapacityArray` mirrors
+that state into flat numpy arrays indexed by a dense *slot map* so those
+walks become masked array queries (DESIGN.md "Vectorized hot state").
+
+Slot-map invariants (the bit-parity load-bearing part):
+
+* **Slot order is canonical order.**  Slots are append-only: the i-th live
+  slot (in slot-index order) is the i-th node of the canonical
+  ``readyset.NodeOrder`` enumeration.  ``add`` appends -- exactly like
+  ``NodeOrder.add`` -- and ``drop`` marks a slot dead without moving the
+  others, so ``np.flatnonzero(mask)`` yields node candidates already in
+  canonical order with no sort.  A node that re-joins after a failure gets
+  a *fresh* slot at the end, matching ``NodeOrder``'s re-append semantics.
+* **Dead slots are masked, then compacted.**  ``drop`` only clears the
+  ``alive`` bit; when dead slots outnumber live ones the arrays are
+  compacted in slot order, which preserves the canonical-order invariant.
+* **Values are written through at the scheduler's existing choke points**
+  (``on_task_finished``, step-1 reservations, ``_start_cop`` /
+  ``on_cop_finished``, ``note_node_added`` / ``note_node_removed``), plus
+  an idempotent ``refresh_many`` on the dirty-node drain, so array values
+  equal the live ``NodeState`` values whenever a consumer reads them --
+  including *mid-event* between a step-1 reservation and the step-2/3
+  scans, which lazy dirty-refresh alone would miss.
+
+Queries read the same values the dict paths read and tie-break the same
+way, so every consumer is bit-identical to its dict twin (the retained
+``vectorized=False`` oracle; property- and equivalence-tested in
+``tests/test_nodearray.py``).
+
+numpy is optional (matching the ``tests/_hyp.py`` optional-dependency
+pattern): without it ``HAVE_NUMPY`` is False and the scheduler keeps the
+dict path, so the suite stays green on bare containers.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+from .types import NodeId, NodeState
+
+try:  # optional dependency -- the dict path needs nothing beyond stdlib
+    import numpy as np
+    HAVE_NUMPY = True
+except ModuleNotFoundError:  # pragma: no cover - exercised on bare images
+    np = None
+    HAVE_NUMPY = False
+
+_MIN_COMPACT = 64
+
+
+class NodeCapacityArray:
+    """Flat mirrors of per-node hot state under a dense node->slot map."""
+
+    def __init__(self, nodes: dict[int, NodeState], order: Iterable[NodeId],
+                 c_node: int = 1) -> None:
+        if not HAVE_NUMPY:
+            raise RuntimeError(
+                "NodeCapacityArray requires numpy; construct the scheduler "
+                "with vectorized=False on numpy-less environments")
+        self.c_node = c_node
+        self.slot_of: dict[NodeId, int] = {}
+        n = len(nodes)
+        cap = max(16, 2 * n)
+        self._node_of = np.zeros(cap, dtype=np.int64)
+        self.free_mem = np.zeros(cap, dtype=np.int64)
+        self.free_cores = np.zeros(cap, dtype=np.float64)
+        self.mem = np.zeros(cap, dtype=np.int64)
+        self.cores = np.zeros(cap, dtype=np.float64)
+        self.active_cops = np.zeros(cap, dtype=np.int64)
+        self.alive = np.zeros(cap, dtype=bool)
+        self._n = 0          # slots handed out (live + dead)
+        self._dead = 0
+        for nid in order:    # canonical enumeration = slot order
+            self.add(nid, nodes[nid])
+
+    # ------------------------------------------------------------- slot map
+    def __len__(self) -> int:
+        return self._n - self._dead
+
+    def __contains__(self, node: NodeId) -> bool:
+        return node in self.slot_of
+
+    def add(self, node: NodeId, state: NodeState) -> None:
+        """Append a slot for ``node`` (idempotent: a live node is
+        refreshed in place, like ``NodeOrder.add``)."""
+        if node in self.slot_of:
+            self.refresh_from(node, state)
+            return
+        if self._n == len(self.alive):
+            self._grow()
+        s = self._n
+        self._n += 1
+        self.slot_of[node] = s
+        self._node_of[s] = node
+        self.alive[s] = True
+        self._write(s, state)
+
+    def drop(self, node: NodeId) -> None:
+        s = self.slot_of.pop(node, None)
+        if s is None:
+            return
+        self.alive[s] = False
+        self._dead += 1
+        if self._dead > max(_MIN_COMPACT, self._n - self._dead):
+            self._compact()
+
+    def _grow(self) -> None:
+        new = max(16, 2 * len(self.alive))
+        for name in ("_node_of", "free_mem", "free_cores", "mem", "cores",
+                     "active_cops", "alive"):
+            old = getattr(self, name)
+            arr = np.zeros(new, dtype=old.dtype)
+            arr[:len(old)] = old
+            setattr(self, name, arr)
+
+    def _compact(self) -> None:
+        """Drop dead slots; live slots keep their relative (= canonical)
+        order, so queries are unaffected."""
+        keep = np.flatnonzero(self.alive[:self._n])
+        m = len(keep)
+        for name in ("_node_of", "free_mem", "free_cores", "mem", "cores",
+                     "active_cops"):
+            arr = getattr(self, name)
+            arr[:m] = arr[keep]
+        self.alive[:m] = True
+        self.alive[m:self._n] = False
+        self._n = m
+        self._dead = 0
+        ids = self._node_of[:m].tolist()
+        self.slot_of = {nid: i for i, nid in enumerate(ids)}
+
+    # --------------------------------------------------------- write-through
+    def _write(self, slot: int, state: NodeState) -> None:
+        self.free_mem[slot] = state.free_mem
+        self.free_cores[slot] = state.free_cores
+        self.mem[slot] = state.mem
+        self.cores[slot] = state.cores
+        self.active_cops[slot] = state.active_cops
+
+    def refresh_from(self, node: NodeId, state: NodeState) -> None:
+        self._write(self.slot_of[node], state)
+
+    def refresh_many(self, nodes: Iterable[NodeId],
+                     states: dict[int, NodeState]) -> None:
+        """One batch pass over the dirty nodes (unknown/removed ids are
+        skipped -- their ``drop`` already happened)."""
+        so = self.slot_of
+        for n in nodes:
+            s = so.get(n)
+            st = states.get(n)
+            if s is not None and st is not None:
+                self._write(s, st)
+
+    def set_free(self, node: NodeId, free_mem: int, free_cores: float) -> None:
+        s = self.slot_of[node]
+        self.free_mem[s] = free_mem
+        self.free_cores[s] = free_cores
+
+    def add_cops(self, node: NodeId, delta: int) -> None:
+        s = self.slot_of.get(node)
+        if s is not None:
+            self.active_cops[s] += delta
+
+    # --------------------------------------------------------------- queries
+    def _live(self) -> "np.ndarray":
+        return self.alive[:self._n]
+
+    def fit_mask(self, mem: int, cores: float) -> "np.ndarray":
+        n = self._n
+        return (self._live() & (self.free_mem[:n] >= mem)
+                & (self.free_cores[:n] >= cores))
+
+    def fitting(self, mem: int, cores: float) -> list[NodeId]:
+        """All nodes whose free resources fit ``(mem, cores)``, in canonical
+        order (slot order *is* canonical order -- no sort)."""
+        return self._node_of[np.flatnonzero(self.fit_mask(mem, cores))].tolist()
+
+    def fitting_with_slots(self, mem: int,
+                           cores: float) -> tuple[list[NodeId], "np.ndarray"]:
+        slots = np.flatnonzero(self.fit_mask(mem, cores))
+        return self._node_of[slots].tolist(), slots
+
+    def any_fit(self, mem: int, cores: float) -> bool:
+        return bool(self.fit_mask(mem, cores).any())
+
+    def free_slot_fit_ids(self, mem: int, cores: float) -> list[NodeId]:
+        """Free-COP-slot nodes whose *free* resources fit -- the step-2
+        candidate pool scan, in canonical order."""
+        n = self._n
+        mask = (self._live() & (self.active_cops[:n] < self.c_node)
+                & (self.free_mem[:n] >= mem) & (self.free_cores[:n] >= cores))
+        return self._node_of[np.flatnonzero(mask)].tolist()
+
+    def free_slot_total_fit_ids(self, mem: int, cores: float) -> list[NodeId]:
+        """Free-COP-slot nodes whose *total* capacity could ever run the
+        task -- the step-3 candidate pool scan, in canonical order."""
+        n = self._n
+        mask = (self._live() & (self.active_cops[:n] < self.c_node)
+                & (self.mem[:n] >= mem) & (self.cores[:n] >= cores))
+        return self._node_of[np.flatnonzero(mask)].tolist()
+
+    def filter_fitting(self, cands: list[NodeId], mem: int,
+                       cores: float) -> list[NodeId]:
+        """``cands`` restricted to nodes whose free resources fit -- the
+        `ilp._feasible` candidate filter as one masked gather.  Returns the
+        input list unchanged (no copy) when everything fits, which is the
+        common case for candidate lists built from :meth:`fitting`."""
+        k = len(cands)
+        if k == 0:
+            return cands
+        so = self.slot_of
+        slots = np.fromiter((so[n] for n in cands), dtype=np.int64, count=k)
+        keep = (self.free_mem[slots] >= mem) & (self.free_cores[slots] >= cores)
+        if keep.all():
+            return cands
+        return [n for n, ok in zip(cands, keep.tolist()) if ok]
+
+    def slots_of(self, nodes: list[NodeId]) -> "np.ndarray":
+        so = self.slot_of
+        return np.fromiter((so[n] for n in nodes), dtype=np.int64,
+                           count=len(nodes))
+
+    # ------------------------------------------------------------ validation
+    def snapshot(self) -> dict[int, tuple[int, float, int]]:
+        """Live ``{node: (free_mem, free_cores, active_cops)}`` -- what the
+        property tests compare against a from-scratch rebuild."""
+        out = {}
+        for nid, s in self.slot_of.items():
+            out[nid] = (int(self.free_mem[s]), float(self.free_cores[s]),
+                        int(self.active_cops[s]))
+        return out
+
+    def live_ids(self) -> list[NodeId]:
+        """Live node ids in slot (= canonical) order."""
+        return self._node_of[np.flatnonzero(self._live())].tolist()
+
+
+class ArrayCapacityClasses:
+    """`readyset.CapacityClasses` facade over a :class:`NodeCapacityArray`:
+    same refresh/drop/fitting/any_fit surface, answered by masked array
+    queries instead of capacity-class dict walks.  The scheduler swaps this
+    in when ``vectorized=True``; results are bit-identical (same values,
+    same canonical order)."""
+
+    def __init__(self, cap: NodeCapacityArray,
+                 nodes: dict[int, NodeState]) -> None:
+        self._cap = cap
+        self._nodes = nodes
+
+    def refresh(self, node: NodeId) -> None:
+        state = self._nodes.get(node)
+        if state is None:
+            self._cap.drop(node)
+        else:
+            self._cap.refresh_from(node, state)
+
+    def refresh_many(self, nodes: Iterable[NodeId]) -> None:
+        self._cap.refresh_many(nodes, self._nodes)
+
+    def drop(self, node: NodeId) -> None:
+        self._cap.drop(node)
+
+    def fitting(self, mem: int, cores: float) -> list[NodeId]:
+        return self._cap.fitting(mem, cores)
+
+    def fitting_with_slots(self, mem: int, cores: float):
+        return self._cap.fitting_with_slots(mem, cores)
+
+    def any_fit(self, mem: int, cores: float) -> bool:
+        return self._cap.any_fit(mem, cores)

@@ -134,6 +134,12 @@ class CapacityClasses:
         self._class_of[node] = key
         self._members.setdefault(key, set()).add(node)
 
+    def refresh_many(self, nodes) -> None:
+        """Batch form of :meth:`refresh` (one call per dirty-node drain;
+        the array-backed twin answers it in a single pass)."""
+        for n in nodes:
+            self.refresh(n)
+
     def drop(self, node: NodeId) -> None:
         old = self._class_of.pop(node, None)
         if old is not None:

@@ -78,10 +78,16 @@ import time
 from .dps import DataPlacementService
 from .ilp import (AssignmentProblem, FingerprintCache,
                   IncrementalAssignmentSolver, component_fingerprint,
-                  exact_gate, group_by_shared_nodes)
+                  exact_gate, group_by_shared_nodes, solve_greedy)
 from .ilp import solve as solve_stateless
+from .nodearray import HAVE_NUMPY, ArrayCapacityClasses, NodeCapacityArray
 from .readyset import CapacityClasses, NodeOrder, ReadySet, ShapeIndex
 from .types import (Action, CopPlan, NodeState, StartCop, StartTask, TaskSpec)
+
+try:  # optional; the dict path stays pure-stdlib (see core/nodearray.py)
+    import numpy as np
+except ModuleNotFoundError:  # pragma: no cover
+    np = None
 
 
 class WowScheduler:
@@ -92,11 +98,22 @@ class WowScheduler:
         c_node: int = 1,
         c_task: int = 2,
         node_order: NodeOrder | None = None,
+        vectorized: bool | None = None,
     ) -> None:
         self.nodes = nodes
         self.dps = dps
         self.c_node = c_node
         self.c_task = c_task
+        # vectorized hot node state (DESIGN.md "Vectorized hot state"):
+        # None = auto (on exactly when numpy is importable).  The dict path
+        # is the retained, equivalence-tested oracle; decisions are
+        # bit-identical either way.
+        if vectorized is None:
+            vectorized = HAVE_NUMPY
+        elif vectorized and not HAVE_NUMPY:
+            raise RuntimeError("vectorized=True requires numpy; "
+                               "pass vectorized=False (dict path) instead")
+        self.vectorized = bool(vectorized)
         # canonical node enumeration order; the environment passes its own
         # (sim/engine.py owns one), standalone use derives it from the dict
         self.node_order = node_order if node_order is not None \
@@ -129,17 +146,23 @@ class WowScheduler:
         self._less_index = ShapeIndex()
         self._less_cache = FingerprintCache()
         self.inputless_stats: dict[str, int] = {
-            "events": 0, "fast_solves": 0, "cache_hits": 0,
-            "cache_misses": 0, "joint_events": 0}
+            "events": 0, "fast_solves": 0, "trunc_solves": 0,
+            "cache_hits": 0, "cache_misses": 0, "joint_events": 0}
         self._startable: dict[int, list[int]] = {} # cached prep ∩ fits, != []
         self._free_slot_nodes: set[int] = {
             n for n, s in nodes.items() if s.active_cops < c_node}
-        self._capacity = CapacityClasses(nodes, self.node_order)
+        if self.vectorized:
+            self._cap_array: NodeCapacityArray | None = NodeCapacityArray(
+                nodes, self.node_order, c_node)
+            self._capacity = ArrayCapacityClasses(self._cap_array, nodes)
+        else:
+            self._cap_array = None
+            self._capacity = CapacityClasses(nodes, self.node_order)
         self._ready_index = ReadySet()
         self.dps.sync_free_sources(self._free_slot_nodes)
         # step-1 solver state lives for the scheduler's lifetime; dirty
         # components are re-solved per event, the rest are reused
-        self._solver = IncrementalAssignmentSolver(nodes)
+        self._solver = IncrementalAssignmentSolver(nodes, cap=self._cap_array)
 
     # ------------------------------------------------------------- events
     def submit(self, task: TaskSpec) -> None:
@@ -164,6 +187,8 @@ class WowScheduler:
         t_node.free_cores += self._cores_of(task_id)
         self._finished_specs.pop(task_id, None)
         self._dirty_nodes.add(node)
+        if self._cap_array is not None:
+            self._cap_array.refresh_from(node, t_node)
 
     def on_cop_finished(self, plan: CopPlan, ok: bool = True) -> None:
         self.active_cops.pop(plan.id, None)
@@ -173,6 +198,8 @@ class WowScheduler:
         for n in plan.nodes:
             state = self.nodes[n]
             state.active_cops = max(0, state.active_cops - 1)
+            if self._cap_array is not None:
+                self._cap_array.refresh_from(n, state)
             if state.active_cops < self.c_node:
                 self._slot_freed(n)
         self.inflight_targets.discard((plan.task_id, plan.target))
@@ -181,6 +208,9 @@ class WowScheduler:
 
     def note_node_added(self, node: int) -> None:
         self.node_order.add(node)       # no-op when the environment owns it
+        if self._cap_array is not None:
+            # fresh slot at the end: same re-append semantics as NodeOrder
+            self._cap_array.add(node, self.nodes[node])
         self._dirty_nodes.add(node)
         self._less_stale = True
         if self.nodes[node].active_cops < self.c_node:
@@ -245,8 +275,10 @@ class WowScheduler:
         for n in dirty_nodes:
             if n in self.nodes:
                 dirty.update(self.dps.iter_tasks_prepared_on(n))
-                self._capacity.refresh(n)
         if dirty_nodes:
+            # one batch pass over the dirty nodes (for the array state this
+            # is an idempotent re-sync on top of the choke-point writes)
+            self._capacity.refresh_many(dirty_nodes)
             self._less_stale = True
         self._dirty_nodes = set()
         self._dirty_tasks = set()
@@ -323,8 +355,29 @@ class WowScheduler:
                 fit = fits[shape]
                 if not exact_gate(len(group), len(group) * len(fit)):
                     self.inputless_stats["fast_solves"] += 1
-                    assign.update(self._greedy_uniform(shape, group, fit))
+                    if self._cap_array is not None:
+                        assign.update(
+                            self._greedy_uniform_vec(shape, group, fit))
+                    else:
+                        assign.update(self._greedy_uniform(shape, group, fit))
                     continue
+            n_tasks = sum(len(self._less_index.group(s)) for s in comp)
+            n_cand = sum(len(self._less_index.group(s)) * len(fits[s])
+                         for s in comp)
+            if not exact_gate(n_tasks, n_cand):
+                # multi-shape component past the gate: the untruncated solve
+                # would be one big `solve_greedy`; the per-shape capacity
+                # bound drops tasks that solve provably never places nor
+                # repairs around, so the instance is O(capacity)-sized.
+                # NB the gate is evaluated on the *untruncated* counts --
+                # deciding it on the truncated instance could flip a greedy
+                # answer to an exact one and break bit-parity.
+                self.inputless_stats["trunc_solves"] += 1
+                tids = self._truncate_component(comp, fits)
+                cand = {tid: fits[self._less_index.shape_of(tid)]
+                        for tid in tids}
+                assign.update(self._solve_truncated(tids, cand))
+                continue
             tids = sorted(
                 (tid for s in comp for tid in self._less_index.tasks_of(s)),
                 key=self._submit_seq.__getitem__)
@@ -332,6 +385,99 @@ class WowScheduler:
                     for tid in tids}
             assign.update(self._solve_inputless_component(tids, cand))
         return assign
+
+    def _shape_capacity(self, shape: tuple[int, float],
+                        fit: list[int]) -> int:
+        """Upper bound on how many ``shape`` tasks a greedy pass can place
+        simultaneously on ``fit``, from the current free resources.  The
+        cores bound adds a +1 float-safety margin per node (repeated float
+        subtraction may admit one placement more than ``//`` predicts;
+        overcounting only keeps extra tasks, undercounting would break
+        parity).  Dict and array paths compute identical values."""
+        mem, cores = shape
+        if mem <= 0 and cores <= 0:
+            return len(fit) * (1 << 40)     # unbounded: keep everything
+        cap = self._cap_array
+        if cap is not None:
+            slots = cap.slots_of(fit)
+            if mem > 0:
+                bound = cap.free_mem[slots] // mem
+                if cores > 0:
+                    cb = (cap.free_cores[slots] // cores).astype(np.int64) + 1
+                    bound = np.minimum(bound, cb)
+            else:
+                bound = (cap.free_cores[slots] // cores).astype(np.int64) + 1
+            return int(bound.sum())
+        total = 0
+        for n in fit:
+            s = self.nodes[n]
+            if mem > 0:
+                b = s.free_mem // mem
+                if cores > 0:
+                    b = min(b, int(s.free_cores // cores) + 1)
+            else:
+                b = int(s.free_cores // cores) + 1
+            total += b
+        return total
+
+    def _truncate_component(self, comp: list[tuple[int, float]],
+                            fits: dict[tuple[int, float], list[int]],
+                            ) -> list[int]:
+        """Decision-identical truncation of a large multi-shape input-less
+        component (DESIGN.md "Vectorized hot state" / truncation note).
+
+        Keep, per shape, the first ``C_s`` tasks of the ``(-priority, id)``
+        bucket (``C_s`` = :meth:`_shape_capacity`), plus every task whose
+        priority exceeds ``Q``, the minimum priority over all kept
+        prefixes.  A dropped task (beyond its prefix, priority <= Q) is a
+        provable no-op for ``solve_greedy`` on the full instance: the
+        greedy pass cannot place it (its >= C_s same-shape predecessors
+        either exhausted the shape's capacity or one of them already failed
+        under monotonically shrinking capacity), and its repair iteration
+        only reaches placed tasks of *strictly lower* priority -- none
+        exist, because everything placed is kept and every kept task has
+        priority >= Q >= the dropped task's.  So the repair pass sees the
+        same placed set and performs the same relocations either way."""
+        idx = self._less_index
+        prefix: dict[tuple[int, float], int] = {}
+        q: float | None = None
+        for shape in comp:
+            group = idx.group(shape)
+            k = min(len(group), self._shape_capacity(shape, fits[shape]))
+            prefix[shape] = k
+            last_prio = -group[k - 1][0]
+            if q is None or last_prio < q:
+                q = last_prio
+        kept: list[int] = []
+        for shape in comp:
+            group = idx.group(shape)
+            k = prefix[shape]
+            kept.extend(tid for _, tid in group[:k])
+            kept.extend(tid for negp, tid in group[k:] if -negp > q)
+        kept.sort(key=self._submit_seq.__getitem__)
+        return kept
+
+    def _solve_truncated(self, tids: list[int],
+                         cand: dict[int, list[int]]) -> dict[int, int]:
+        """Greedy solve of a truncated component, cached like the generic
+        tier.  ``solve_greedy`` is forced directly: re-running the tiered
+        gate on the (smaller) truncated instance could flip it to the exact
+        tier and change decisions.  The fingerprint is salted so these
+        greedy answers never collide with tiered answers of an isomorphic
+        small component."""
+        fp, nlist, npos = component_fingerprint(
+            tids, self.ready, cand, self.nodes)
+        fp = ("trunc", fp)
+        hit = self._less_cache.get(fp, tids, nlist)
+        if hit is not None:
+            self.inputless_stats["cache_hits"] += 1
+            return hit
+        self.inputless_stats["cache_misses"] += 1
+        sub = solve_greedy(AssignmentProblem(
+            [self.ready[tid] for tid in tids], cand,
+            {n: self.nodes[n] for n in nlist}, self._cap_array))
+        self._less_cache.put(fp, tids, npos, sub)
+        return sub
 
     def _greedy_uniform(self, shape: tuple[int, float],
                         group: list[tuple[float, int]],
@@ -360,6 +506,38 @@ class WowScheduler:
             free_cores[best] -= cores
         return out
 
+    def _greedy_uniform_vec(self, shape: tuple[int, float],
+                            group: list[tuple[float, int]],
+                            fit: list[int]) -> dict[int, int]:
+        """Array twin of :meth:`_greedy_uniform`: the best-fit key
+        ``(fc - cores, fm - mem, id)`` is minimized by three staged masked
+        reductions over the same values the dict loop reads (the
+        subtractions are performed *before* comparing, so float ties fall
+        exactly where the dict path's tuple comparison puts them)."""
+        mem, cores = shape
+        cap = self._cap_array
+        slots = cap.slots_of(fit)
+        fm = cap.free_mem[slots].copy()
+        fc = cap.free_cores[slots].copy()
+        ids = np.asarray(fit, dtype=np.int64)
+        big = np.iinfo(np.int64).max
+        out: dict[int, int] = {}
+        for _, tid in group:
+            ok = (fm >= mem) & (fc >= cores)
+            fck = np.where(ok, fc - cores, np.inf)
+            m0 = fck.min()
+            if m0 == np.inf:
+                break                       # first failure stops the shape
+            t1 = fck == m0
+            fmk = np.where(t1, fm - mem, big)
+            t2 = fmk == fmk.min()
+            idk = np.where(t2, ids, big)
+            j = int(idk.argmin())
+            out[tid] = int(ids[j])
+            fm[j] -= mem
+            fc[j] -= cores
+        return out
+
     def _solve_inputless_component(self, tids: list[int],
                                    cand: dict[int, list[int]]) -> dict[int, int]:
         """One small/multi-shape input-less component through the tiered
@@ -373,7 +551,8 @@ class WowScheduler:
             return hit
         self.inputless_stats["cache_misses"] += 1
         sub = solve_stateless(AssignmentProblem(
-            [self.ready[tid] for tid in tids], cand, self.nodes))
+            [self.ready[tid] for tid in tids], cand, self.nodes,
+            self._cap_array))
         self._less_cache.put(fp, tids, npos, sub)
         return sub
 
@@ -419,6 +598,10 @@ class WowScheduler:
             node = self.nodes[n]
             node.free_mem -= t.mem
             node.free_cores -= t.cores
+            if self._cap_array is not None:
+                # write through *now*: the step-2/3 pool masks of this same
+                # event read post-reservation capacity, like the dict path
+                self._cap_array.set_free(n, node.free_mem, node.free_cores)
             self.running[tid] = n
             self._finished_specs[tid] = t
             started.add(tid)
@@ -469,6 +652,8 @@ class WowScheduler:
         for n in plan.nodes:
             state = self.nodes[n]
             state.active_cops += 1
+            if self._cap_array is not None:
+                self._cap_array.refresh_from(n, state)
             if state.active_cops >= self.c_node:
                 self._slot_busy(n)
         self.inflight_targets.add((plan.task_id, plan.target))
@@ -504,16 +689,30 @@ class WowScheduler:
                 continue
             # nodes with free compute capacity, spare COP slot, not already
             # prepared / being prepared
-            cands = [
-                n for n in pool
-                if self.nodes[n].fits(t)
-                and (tid, n) not in self.inflight_targets
-                and not dps.is_prepared_task(tid, n)
-            ]
+            prepped = dps.prepared_node_set(tid)
+            inflight = self.inflight_targets
+            if self._cap_array is not None and pool is self._free_slot_nodes:
+                # whole free-slot pool: one masked array scan replaces the
+                # per-node fits() walk (identical set; the sort below fixes
+                # the order either way)
+                base = self._cap_array.free_slot_fit_ids(t.mem, t.cores)
+            else:
+                base = [n for n in pool if self.nodes[n].fits(t)]
+            cands = [n for n in base
+                     if (tid, n) not in inflight and n not in prepped]
             if not cands:
                 continue
-            # earliest start ~ fewest missing bytes (paper §IV-C)
-            cands.sort(key=lambda n: (dps.missing_bytes_task(tid, n), n))
+            # earliest start ~ fewest missing bytes (paper §IV-C).  Most
+            # candidates hold none of the task's inputs and share the key
+            # (task_bytes, n), so when *no* node holds input bytes the sort
+            # degenerates to plain id order -- same result, no key calls.
+            present = dps.present_bytes_map(tid)
+            if present:
+                tb = dps.task_input_bytes(tid)
+                get = present.get
+                cands.sort(key=lambda n: (tb - get(n, 0), n))
+            else:
+                cands.sort()
             for n in cands:
                 plan = dps.plan_cop(tid, t.inputs, n, self._free_slot_nodes,
                                     feasible_targets=feas)
@@ -540,13 +739,22 @@ class WowScheduler:
                 continue
             # canonical order: the reference probes nodes in enumeration
             # order and plan_cop consumes tie-break randomness per feasible
-            # probe, so the probe order is decision-relevant
-            cands = order.sort(
-                n for n in pool
-                if (tid, n) not in self.inflight_targets
-                and not dps.is_prepared_task(tid, n)
-                and t.mem <= self.nodes[n].mem        # could ever run here
-                and t.cores <= self.nodes[n].cores)
+            # probe, so the probe order is decision-relevant.  The masked
+            # scan yields slot order, which *is* canonical order.
+            prepped = dps.prepared_node_set(tid)
+            inflight = self.inflight_targets
+            if self._cap_array is not None and pool is self._free_slot_nodes:
+                cands = [
+                    n for n in self._cap_array.free_slot_total_fit_ids(
+                        t.mem, t.cores)
+                    if (tid, n) not in inflight and n not in prepped]
+            else:
+                cands = order.sort(
+                    n for n in pool
+                    if (tid, n) not in inflight
+                    and n not in prepped
+                    and t.mem <= self.nodes[n].mem    # could ever run here
+                    and t.cores <= self.nodes[n].cores)
             if not cands:
                 continue
             best: CopPlan | None = None

@@ -53,6 +53,10 @@ class SimConfig:
     # "scan" (retained pre-heap progressive fill -- the pre-PR engine, kept
     # as the equivalence reference and the sim_throughput baseline)
     flow_fill: str = "heap"
+    # vectorized hot node state in the wow scheduler: None = auto (on when
+    # numpy is importable), False = retained dict oracle.  Decisions are
+    # bit-identical either way (DESIGN.md "Vectorized hot state").
+    vectorized: bool | None = None
 
 
 @dataclasses.dataclass
@@ -94,7 +98,7 @@ class Simulation:
         self.strategy: BaseStrategy = make_strategy(
             strategy, self.nodes, c_node=cfg.c_node, c_task=cfg.c_task,
             seed=cfg.seed, reference_core=cfg.reference_core,
-            node_order=self.node_order)
+            node_order=self.node_order, vectorized=cfg.vectorized)
 
         extra: tuple[int, ...] = ()
         self.nfs_server = cfg.n_nodes

@@ -142,14 +142,21 @@ class WowStrategy(BaseStrategy):
     def __init__(self, nodes: dict[int, NodeState], c_node: int = 1,
                  c_task: int = 2, seed: int = 0,
                  reference_core: bool = False,
-                 node_order: NodeOrder | None = None) -> None:
+                 node_order: NodeOrder | None = None,
+                 vectorized: bool | None = None) -> None:
         super().__init__(nodes)
         if node_order is None:
             node_order = NodeOrder(nodes)
         self.dps = DataPlacementService(seed=seed, node_order=node_order)
-        sched_cls = ReferenceWowScheduler if reference_core else WowScheduler
-        self.sched = sched_cls(nodes, self.dps, c_node=c_node, c_task=c_task,
-                               node_order=node_order)
+        if reference_core:
+            # the frozen reference has no vectorized path by design
+            self.sched = ReferenceWowScheduler(
+                nodes, self.dps, c_node=c_node, c_task=c_task,
+                node_order=node_order)
+        else:
+            self.sched = WowScheduler(
+                nodes, self.dps, c_node=c_node, c_task=c_task,
+                node_order=node_order, vectorized=vectorized)
         self._specs: dict[int, TaskSpec] = {}
 
     def submit(self, task: TaskSpec) -> None:
@@ -176,7 +183,8 @@ class WowStrategy(BaseStrategy):
 def make_strategy(name: str, nodes: dict[int, NodeState], *, c_node: int = 1,
                   c_task: int = 2, seed: int = 0,
                   reference_core: bool = False,
-                  node_order: NodeOrder | None = None) -> BaseStrategy:
+                  node_order: NodeOrder | None = None,
+                  vectorized: bool | None = None) -> BaseStrategy:
     if name == "orig":
         return OrigStrategy(nodes)
     if name == "cws":
@@ -184,5 +192,5 @@ def make_strategy(name: str, nodes: dict[int, NodeState], *, c_node: int = 1,
     if name == "wow":
         return WowStrategy(nodes, c_node=c_node, c_task=c_task, seed=seed,
                            reference_core=reference_core,
-                           node_order=node_order)
+                           node_order=node_order, vectorized=vectorized)
     raise ValueError(f"unknown strategy {name!r}")
