@@ -40,6 +40,17 @@ class FileSpec:
     def __hash__(self) -> int:
         return self.id
 
+    def rebased(self, task_base: int, file_base: int) -> "FileSpec":
+        """A copy living in the (task_base, file_base) id namespace.
+
+        Multi-tenant traffic runs many workflow *instances* through one
+        engine/scheduler; rebasing each instance's dense local ids onto a
+        per-instance base guarantees task/file ids never collide across
+        concurrent instances (DESIGN.md "Open-loop traffic")."""
+        return FileSpec(id=self.id + file_base, size=self.size,
+                        producer=self.producer + task_base,
+                        consumers={c + task_base for c in self.consumers})
+
 
 @dataclasses.dataclass
 class TaskSpec:
@@ -61,6 +72,16 @@ class TaskSpec:
 
     def __hash__(self) -> int:
         return self.id
+
+    def rebased(self, task_base: int, file_base: int,
+                prefix: str = "") -> "TaskSpec":
+        """A copy in the (task_base, file_base) id namespace; ``prefix``
+        additionally namespaces the abstract name so concurrent instances
+        keep independent abstract DAGs (ranks/priorities never mix)."""
+        return dataclasses.replace(
+            self, id=self.id + task_base, abstract=prefix + self.abstract,
+            inputs=tuple(f + file_base for f in self.inputs),
+            outputs=tuple(f + file_base for f in self.outputs))
 
 
 @dataclasses.dataclass

@@ -1,16 +1,22 @@
 """Discrete-event cluster simulator for the WOW reproduction."""
 from .dfs import CephModel, DfsModel, NfsModel
-from .engine import DeadlockError, SimConfig, Simulation, run_workflow
-from .metrics import SimResult, efficiency, gini
+from .engine import (DeadlockError, SimConfig, Simulation, run_traffic,
+                     run_workflow)
+from .metrics import (SimResult, TrafficResult, compute_traffic_result,
+                      efficiency, gini, jain, percentile)
 from .network import Flow, FlowManager, ReferenceFlowManager, build_links
 from .strategies import (BaseStrategy, CwsStrategy, OrigStrategy,
                          WowStrategy, make_strategy)
+from .traffic import (ArrivalSpec, InstanceRecord, TenantSpec,
+                      TrafficConfig, arrival_schedule)
 from .workflow import Workflow
 
 __all__ = [
-    "BaseStrategy", "CephModel", "CwsStrategy", "DeadlockError", "DfsModel",
-    "Flow", "FlowManager", "NfsModel", "OrigStrategy",
-    "ReferenceFlowManager", "SimConfig", "SimResult", "Simulation",
-    "Workflow", "WowStrategy", "build_links", "efficiency", "gini",
-    "make_strategy", "run_workflow",
+    "ArrivalSpec", "BaseStrategy", "CephModel", "CwsStrategy",
+    "DeadlockError", "DfsModel", "Flow", "FlowManager", "InstanceRecord",
+    "NfsModel", "OrigStrategy", "ReferenceFlowManager", "SimConfig",
+    "SimResult", "Simulation", "TenantSpec", "TrafficConfig",
+    "TrafficResult", "Workflow", "WowStrategy", "arrival_schedule",
+    "build_links", "compute_traffic_result", "efficiency", "gini", "jain",
+    "make_strategy", "percentile", "run_traffic", "run_workflow",
 ]

@@ -21,9 +21,11 @@ from ..core import (DFS_LOC, FileSpec, NodeOrder, NodeState, StartCop,
                     StartTask, TaskSpec, abstract_ranks, assign_priorities)
 from ..core.types import CopPlan
 from .dfs import CephModel, DfsModel, NfsModel
-from .metrics import SimResult, gini
+from .metrics import SimResult, TrafficResult, compute_traffic_result, gini
 from .network import FlowManager, ReferenceFlowManager, build_links
 from .strategies import BaseStrategy, WowStrategy, make_strategy
+from .traffic import ArrivalSpec, InstanceRecord, TrafficConfig, \
+    arrival_schedule
 from .workflow import Workflow
 
 GiB = 1024 ** 3
@@ -81,8 +83,19 @@ class DeadlockError(RuntimeError):
 
 
 class Simulation:
-    def __init__(self, wf: Workflow, cfg: SimConfig,
-                 strategy: str = "wow") -> None:
+    def __init__(self, wf: Workflow | None, cfg: SimConfig,
+                 strategy: str = "wow",
+                 traffic: TrafficConfig | None = None) -> None:
+        # open-loop traffic mode (DESIGN.md "Open-loop traffic"): workflows
+        # arrive over virtual time as seeded arrival events instead of (or
+        # in addition to) one workflow submitted at t=0.  With ``traffic``
+        # absent or disabled the engine is byte-for-byte the single-run
+        # engine: the hooks below are no-ops, decisions are bit-identical
+        # (golden-tested in tests/test_traffic.py).
+        self.traffic = traffic if (traffic is not None
+                                   and traffic.enabled) else None
+        if wf is None:
+            wf = Workflow("traffic", {}, {}, {})
         wf.validate()
         self.wf = wf
         self.cfg = cfg
@@ -152,6 +165,26 @@ class Simulation:
         self.steps_executed = 0              # engine loop steps (events/sec)
         # (time, kind, task id, node) per applied action -- equivalence tests
         self.action_log: list[tuple[float, str, int, int]] = []
+        # ------------------------------------------------ open-loop traffic
+        # per-instance lifecycle bookkeeping; empty/inert without traffic
+        self._instances: dict[int, InstanceRecord] = {}
+        self._task_instance: dict[int, int] = {}
+        self._instance_abstracts: dict[int, set[str]] = {}
+        self._rejections: list[tuple[float, str]] = []
+        self._depth_samples: list[tuple[float, int, int]] = []
+        self._live_instances = 0
+        self._retired_instances = 0
+        # id-namespace allocation cursors: instance k's local ids are
+        # rebased onto [base, base+span) so concurrent instances never
+        # collide with each other or with a t=0 workflow
+        self._next_task_base, self._next_file_base = wf.id_bounds()
+        # first-completion aggregates that survive instance retirement
+        self._tt_tasks_done = 0
+        self._tt_cpu_seconds = 0.0
+        self._tt_min_start = math.inf
+        self._tt_max_end = 0.0
+        self._arrival_specs: list[ArrivalSpec] = (
+            arrival_schedule(self.traffic) if self.traffic else [])
 
     # ------------------------------------------------------------- plumbing
     def _push_timer(self, t: float, kind: str, payload: object) -> None:
@@ -211,6 +244,12 @@ class Simulation:
         task = self.wf.tasks[tid]
         run = _TaskRun(task, node, "read", set(), self.time)
         self.task_runs[tid] = run
+        if self.traffic is not None:
+            iid = self._task_instance.get(tid)
+            if iid is not None:
+                rec = self._instances[iid]
+                if rec.first_start_t is None:
+                    rec.first_start_t = self.time
         if isinstance(self.strategy, WowStrategy):
             dps = self.strategy.dps
             assert dps.is_prepared(task.inputs, node), (
@@ -306,6 +345,8 @@ class Simulation:
         self.done_tasks[tid] = (run.start, self.time, node)
         self.cpu_per_node[node] = (self.cpu_per_node.get(node, 0.0)
                                    + (self.time - run.start) * task.cores)
+        if self.traffic is not None:
+            self._traffic_task_done(tid, run.start, self.time, task.cores)
         self.strategy.on_task_finished(tid, node)
         if isinstance(self.strategy, WowStrategy):
             for f in task.outputs:
@@ -476,7 +517,9 @@ class Simulation:
                     self.remaining_inputs[c] = sum(
                         1 for g in self.wf.tasks[c].inputs
                         if g not in self.produced)
-        self.done_tasks.pop(producer.id, None)
+        popped = self.done_tasks.pop(producer.id, None)
+        if popped is not None and self.traffic is not None:
+            self._traffic_task_undone(producer.id, popped, producer.cores)
         dps = self.strategy.dps
         missing = [f for f in producer.inputs if not dps.locations(f)]
         self.remaining_inputs[producer.id] = len(missing)
@@ -486,7 +529,9 @@ class Simulation:
             self._submit(producer)
 
     def _resubmit(self, task: TaskSpec) -> None:
-        self.done_tasks.pop(task.id, None)
+        popped = self.done_tasks.pop(task.id, None)
+        if popped is not None and self.traffic is not None:
+            self._traffic_task_undone(task.id, popped, task.cores)
         self._submit(task)
 
     def _join_node(self, node_id: int) -> None:
@@ -499,12 +544,162 @@ class Simulation:
         self.dfs.add_node(node_id)      # joins the placement universe
         self.strategy.on_node_added(node_id)
 
+    # -------------------------------------------------- open-loop traffic
+    def _sample_depth(self) -> None:
+        self._depth_samples.append((self.time, len(self.pending),
+                                    self._live_instances))
+
+    def _on_arrival(self, spec: ArrivalSpec) -> None:
+        """Workflow arrival event: admission gate, then id-namespacing and
+        merge into the engine's (shared) workflow view.
+
+        The arrival stream is pre-generated by ``arrival_schedule`` at
+        ``run()``; only the admission decision depends on engine state."""
+        tr = self.traffic
+        self._sample_depth()
+        if (tr.max_backlog is not None
+                and self._live_instances >= tr.max_backlog):
+            self._rejections.append((self.time, spec.tenant))
+            return
+        from ..workloads import make_workflow  # lazy: package cycle
+        template = make_workflow(spec.workflow, scale=spec.scale,
+                                 seed=spec.seed)
+        prefix = f"{spec.tenant}/{spec.index}:"
+        t_base, f_base = self._next_task_base, self._next_file_base
+        t_span, f_span = template.id_bounds()
+        self._next_task_base += t_span
+        self._next_file_base += f_span
+        inst = template.namespaced(t_base, f_base, prefix)
+        rec = InstanceRecord(
+            id=spec.index, tenant=spec.tenant, workflow=spec.workflow,
+            arrival_t=self.time, n_tasks=len(inst.tasks),
+            task_ids=frozenset(inst.tasks), remaining=len(inst.tasks))
+        self._instances[spec.index] = rec
+        self._instance_abstracts[spec.index] = set(inst.abstract_edges)
+        self._live_instances += 1
+        # merge the namespaced instance into the engine's merged view; the
+        # prefixed abstract names keep per-instance rank DAGs independent
+        self.wf.tasks.update(inst.tasks)
+        self.wf.files.update(inst.files)
+        self.wf.abstract_edges.update(inst.abstract_edges)
+        self.ranks.update(abstract_ranks(inst.abstract_edges))
+        for f in inst.files.values():
+            self.file_sizes[f.id] = f.size
+        for t in inst.tasks.values():
+            self.remaining_inputs[t.id] = len(t.inputs)
+            self._task_instance[t.id] = spec.index
+        for t in inst.tasks.values():
+            if self.remaining_inputs[t.id] == 0:
+                self._submit(t)
+
+    def _traffic_task_done(self, tid: int, start: float, end: float,
+                           cores: float) -> None:
+        self._tt_tasks_done += 1
+        self._tt_cpu_seconds += (end - start) * cores
+        self._tt_min_start = min(self._tt_min_start, start)
+        self._tt_max_end = max(self._tt_max_end, end)
+        iid = self._task_instance.get(tid)
+        if iid is None:
+            return
+        rec = self._instances[iid]
+        if rec.completed_t is not None:     # post-completion recovery re-run
+            return
+        rec.cpu_seconds += (end - start) * cores
+        rec.remaining -= 1
+        if rec.remaining == 0:
+            rec.completed_t = end
+            self._live_instances -= 1
+            self._sample_depth()
+            # retire event: reclaim the instance's engine/DPS state.  The
+            # completion metrics are already recorded on the InstanceRecord.
+            self._push_timer(end, "retire", iid)
+
+    def _traffic_task_undone(self, tid: int, done: tuple, cores: float) -> None:
+        """A previously-done task re-runs (failure recovery): roll the
+        first-completion accounting back unless its instance already
+        completed (a completed instance keeps its recorded latency)."""
+        iid = self._task_instance.get(tid)
+        if iid is None:
+            return
+        rec = self._instances[iid]
+        if rec.completed_t is not None:
+            return
+        s, e, _ = done
+        rec.cpu_seconds -= (e - s) * cores
+        rec.remaining += 1
+
+    def _retire_instance(self, iid: int) -> None:
+        """Retire event: drop the completed instance's task/file specs from
+        the merged workflow view and release its DPS-tracked replicas, so a
+        long-running service holds state proportional to the *live* backlog
+        only.  DFS-resident bytes persist (written data outlives the run,
+        and the placement map stays authoritative for storage metrics)."""
+        rec = self._instances[iid]
+        if any(t in self.task_runs or t in self.pending
+               for t in rec.task_ids):
+            return      # failure recovery re-opened the instance; keep it
+        wow = isinstance(self.strategy, WowStrategy)
+        for tid in rec.task_ids:
+            task = self.wf.tasks.pop(tid, None)
+            if task is None:
+                continue
+            self.done_tasks.pop(tid, None)
+            self.remaining_inputs.pop(tid, None)
+            self._task_instance.pop(tid, None)
+            self.strategy.forget_task(tid)
+            for f in task.outputs:
+                if wow:
+                    self.strategy.dps.delete_replicas(f, keep=0)
+                self.wf.files.pop(f, None)
+                self.file_sizes.pop(f, None)
+                self.produced.discard(f)
+        for a in self._instance_abstracts.pop(iid, ()):
+            self.wf.abstract_edges.pop(a, None)
+            self.ranks.pop(a, None)
+        self._retired_instances += 1
+
+    def _traffic_incomplete(self) -> list[dict]:
+        """Why did admitted instances not finish?  Residual task states per
+        unfinished instance -- the admission gate may shed load at the
+        door, but an admitted instance must complete or be explained."""
+        out: list[dict] = []
+        for rec in self._instances.values():
+            if rec.completed_t is not None:
+                continue
+            running = sum(1 for t in rec.task_ids if t in self.task_runs)
+            queued = sum(1 for t in rec.task_ids if t in self.pending)
+            done = sum(1 for t in rec.task_ids if t in self.done_tasks)
+            blocked = rec.n_tasks - running - queued - done
+            if queued:
+                reason = "queued: no node ever fit / scheduler never started"
+            elif running:
+                reason = "running at horizon"
+            else:
+                reason = "blocked: inputs never produced"
+            out.append({"id": rec.id, "tenant": rec.tenant,
+                        "workflow": rec.workflow,
+                        "arrival_t": rec.arrival_t, "done": done,
+                        "running": running, "queued": queued,
+                        "blocked": blocked, "reason": reason})
+        return out
+
+    def traffic_result(self) -> TrafficResult:
+        if self.traffic is None:
+            raise RuntimeError("simulation was not run with a TrafficConfig")
+        return compute_traffic_result(
+            self.traffic, sorted(self._instances.values(),
+                                 key=lambda r: r.id),
+            self._rejections, self._depth_samples, end_time=self.time,
+            incomplete=self._traffic_incomplete())
+
     # ------------------------------------------------------------------ run
     def run(self, max_steps: int = 50_000_000) -> SimResult:
         for t, n in self._scheduled_failures:
             self._push_timer(t, "fail", n)
         for t, n in self._scheduled_joins:
             self._push_timer(t, "join", n)
+        for spec in self._arrival_specs:
+            self._push_timer(spec.time, "arrive", spec)
         self._submit_initial()
         self._iterate()
         steps = 0
@@ -532,7 +727,7 @@ class Simulation:
                 progressed = True
             if progressed:
                 self._iterate()
-        if len(self.done_tasks) != len(self.wf.tasks):
+        if self.traffic is None and len(self.done_tasks) != len(self.wf.tasks):
             missing = set(self.wf.tasks) - set(self.done_tasks)
             raise DeadlockError(
                 f"{len(missing)} tasks never completed, e.g. "
@@ -582,14 +777,28 @@ class Simulation:
             self._fail_node(payload)
         elif kind == "join":
             self._join_node(payload)
+        elif kind == "arrive":
+            self._on_arrival(payload)
+        elif kind == "retire":
+            self._retire_instance(payload)
 
     # -------------------------------------------------------------- metrics
     def _result(self) -> SimResult:
-        starts = [s for s, _, _ in self.done_tasks.values()]
-        ends = [e for _, e, _ in self.done_tasks.values()]
-        makespan = (max(ends) - min(starts)) if ends else 0.0
-        cpu_hours = sum((e - s) * self.wf.tasks[t].cores
-                        for t, (s, e, _) in self.done_tasks.items()) / 3600.0
+        if self.traffic is not None:
+            # retired instances left done_tasks/wf.tasks; the engine kept
+            # running first-completion aggregates instead
+            makespan = ((self._tt_max_end - self._tt_min_start)
+                        if self._tt_tasks_done else 0.0)
+            cpu_hours = self._tt_cpu_seconds / 3600.0
+            tasks_total = self._tt_tasks_done
+        else:
+            starts = [s for s, _, _ in self.done_tasks.values()]
+            ends = [e for _, e, _ in self.done_tasks.values()]
+            makespan = (max(ends) - min(starts)) if ends else 0.0
+            cpu_hours = sum((e - s) * self.wf.tasks[t].cores
+                            for t, (s, e, _)
+                            in self.done_tasks.items()) / 3600.0
+            tasks_total = len(self.done_tasks)
         unique = sum(f.size for f in self.wf.files.values())
         cop_bytes = 0
         cops_created = 0
@@ -617,7 +826,7 @@ class Simulation:
             n_nodes=self.cfg.n_nodes,
             makespan=makespan,
             cpu_alloc_hours=cpu_hours,
-            tasks_total=len(self.done_tasks),
+            tasks_total=tasks_total,
             tasks_no_cop=self.tasks_no_cop,
             cops_created=cops_created,
             cops_used=len(self.used_cops),
@@ -643,3 +852,14 @@ def run_workflow(wf: Workflow, strategy: str, cfg: SimConfig | None = None,
                  **cfg_overrides) -> SimResult:
     cfg = dataclasses.replace(cfg or SimConfig(), **cfg_overrides)
     return Simulation(wf, cfg, strategy).run()
+
+
+def run_traffic(traffic: TrafficConfig, strategy: str,
+                cfg: SimConfig | None = None,
+                **cfg_overrides) -> tuple[SimResult, TrafficResult]:
+    """Run an open-loop multi-tenant stream; returns (SimResult,
+    TrafficResult)."""
+    cfg = dataclasses.replace(cfg or SimConfig(), **cfg_overrides)
+    sim = Simulation(None, cfg, strategy, traffic=traffic)
+    res = sim.run()
+    return res, sim.traffic_result()

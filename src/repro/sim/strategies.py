@@ -51,6 +51,11 @@ class BaseStrategy:
     def on_node_removed(self, node: int) -> None:  # noqa: ARG002
         pass
 
+    def forget_task(self, task_id: int) -> None:  # noqa: ARG002
+        """Instance retirement (open-loop traffic): drop any retained spec
+        for a completed task so service-mode memory stays bounded."""
+        pass
+
     def _reserve(self, t: TaskSpec, node: int) -> None:
         self.nodes[node].free_mem -= t.mem
         self.nodes[node].free_cores -= t.cores
@@ -178,6 +183,9 @@ class WowStrategy(BaseStrategy):
 
     def on_node_removed(self, node: int) -> None:
         self.sched.note_node_removed(node)
+
+    def forget_task(self, task_id: int) -> None:
+        self._specs.pop(task_id, None)
 
 
 def make_strategy(name: str, nodes: dict[int, NodeState], *, c_node: int = 1,

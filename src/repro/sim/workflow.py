@@ -16,6 +16,31 @@ class Workflow:
     def consumers_of(self, file_id: int) -> set[int]:
         return self.files[file_id].consumers
 
+    # ------------------------------------------------------ id namespacing
+    def id_bounds(self) -> tuple[int, int]:
+        """(task id span, file id span): one past the largest local id."""
+        t_span = 1 + max(self.tasks) if self.tasks else 0
+        f_span = 1 + max(self.files) if self.files else 0
+        return t_span, f_span
+
+    def namespaced(self, task_base: int, file_base: int,
+                   prefix: str = "") -> "Workflow":
+        """A deep copy rebased into a per-instance id namespace.
+
+        The open-loop traffic engine admits many concurrent instances of
+        (possibly the same) workflow template; each is rebased onto bases
+        allocated from the engine's running counters so task ids, file ids
+        and (via the prefixed abstract names) rank/priority namespaces never
+        collide between tenants or instances.  ``prefix`` is prepended to
+        the workflow name and every abstract task name."""
+        tasks = {t.id + task_base: t.rebased(task_base, file_base, prefix)
+                 for t in self.tasks.values()}
+        files = {f.id + file_base: f.rebased(task_base, file_base)
+                 for f in self.files.values()}
+        edges = {prefix + a: {prefix + b for b in succs}
+                 for a, succs in self.abstract_edges.items()}
+        return Workflow(prefix + self.name, tasks, files, edges)
+
     def validate(self) -> None:
         """Structural sanity: every input is produced by exactly one task,
         the physical DAG is acyclic, consumer sets are consistent."""

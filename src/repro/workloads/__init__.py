@@ -2,13 +2,14 @@
 from __future__ import annotations
 
 from ..sim.workflow import Workflow
-from . import patterns, realworld, synthetic
+from . import mlpipes, patterns, realworld, synthetic
 
 PATTERNS = ["all_in_one", "chain", "fork", "group", "group_multiple"]
 SYNTHETIC = ["syn_blast", "syn_bwa", "syn_cycles", "syn_genome",
              "syn_montage", "syn_seismology", "syn_soykb"]
 REAL_WORLD = ["rnaseq", "sarek", "chipseq", "rangeland"]
-ALL_WORKFLOWS = REAL_WORLD + SYNTHETIC + PATTERNS
+MLPIPES = ["mlpipe_phi4", "mlpipe_deepseek", "mlpipe_mamba"]
+ALL_WORKFLOWS = REAL_WORLD + SYNTHETIC + PATTERNS + MLPIPES
 
 _REGISTRY = {
     "all_in_one": patterns.all_in_one,
@@ -27,6 +28,9 @@ _REGISTRY = {
     "sarek": realworld.sarek,
     "chipseq": realworld.chipseq,
     "rangeland": realworld.rangeland,
+    "mlpipe_phi4": mlpipes.mlpipe_phi4,
+    "mlpipe_deepseek": mlpipes.mlpipe_deepseek,
+    "mlpipe_mamba": mlpipes.mlpipe_mamba,
 }
 
 

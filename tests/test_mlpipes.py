@@ -1,0 +1,130 @@
+"""Roofline-costed ML-pipeline workflows (workloads/mlpipes.py).
+
+The builder must connect the repo's two halves honestly: every task cost
+and artifact size in an ``mlpipe`` workflow is re-derivable from the
+analytic roofline rows (``mlpipe_stages``) and the architecture config --
+these tests recompute them from scratch and demand equality.
+"""
+import math
+
+import pytest
+from _hyp import given, settings, st
+
+from repro.configs import get_config
+from repro.sim import run_workflow
+from repro.workloads import MLPIPES, make_workflow
+from repro.workloads.mlpipes import (BATCH, EVAL_DECODE_TOKENS,
+                                     EVAL_REQUESTS, SEQ, TOKEN_BYTES,
+                                     TOKENIZE_RATE, checkpoint_bytes,
+                                     mlpipe, mlpipe_stages, step_seconds)
+
+ARCH_OF = {"mlpipe_phi4": "phi4-mini-3.8b",
+           "mlpipe_deepseek": "deepseek-7b",
+           "mlpipe_mamba": "mamba2-780m"}
+
+
+@pytest.mark.parametrize("name", MLPIPES)
+def test_registered_and_valid(name):
+    wf = make_workflow(name, scale=0.5, seed=1)
+    wf.validate()
+    kinds = {t.abstract for t in wf.tasks.values()}
+    assert kinds == {"ingest", "tokenize", "train", "eval"}
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.sampled_from(sorted(ARCH_OF)), st.floats(0.1, 2.0),
+       st.integers(0, 10_000))
+def test_seed_deterministic(name, scale, seed):
+    w1 = make_workflow(name, scale=scale, seed=seed)
+    w2 = make_workflow(name, scale=scale, seed=seed)
+    assert repr(sorted(w1.tasks.items())) == repr(sorted(w2.tasks.items()))
+    assert ([ (f, s.size) for f, s in sorted(w1.files.items()) ]
+            == [ (f, s.size) for f, s in sorted(w2.files.items()) ])
+    w3 = make_workflow(name, scale=scale, seed=seed + 1)
+    assert (repr(sorted(w1.tasks.items()))
+            != repr(sorted(w3.tasks.items())))  # jitter actually varies
+
+
+@pytest.mark.parametrize("name,arch", sorted(ARCH_OF.items()))
+def test_task_costs_match_roofline_rows(name, arch):
+    """Re-derive every compute_time and artifact size from the report rows
+    the builder claims it used."""
+    wf = make_workflow(name, scale=0.5, seed=3)
+    reports = mlpipe_stages(arch)
+    cfg = get_config(arch)
+    ckpt = checkpoint_bytes(cfg)
+    train_s = step_seconds(reports["train"])
+
+    tokenize = [t for t in wf.tasks.values() if t.abstract == "tokenize"]
+    trains = [t for t in wf.tasks.values() if t.abstract == "train"]
+    evals = [t for t in wf.tasks.values() if t.abstract == "eval"]
+    (ingest,) = [t for t in wf.tasks.values() if t.abstract == "ingest"]
+
+    # shard sizes carry +-10% jitter around SHARD_TOKENS; tokenize compute
+    # is exactly tokens / TOKENIZE_RATE for the jittered token count
+    shard_tokens = []
+    for t in tokenize:
+        nbytes = wf.files[t.outputs[0]].size
+        toks = nbytes // TOKEN_BYTES
+        shard_tokens.append(toks)
+        assert t.compute_time == pytest.approx(toks / TOKENIZE_RATE)
+    total_tokens = sum(shard_tokens)
+    assert ingest.dfs_inputs == total_tokens * TOKEN_BYTES
+
+    # train epochs: steps * roofline step time, checkpoint-sized outputs
+    steps = max(1, math.ceil(total_tokens / (BATCH * SEQ)))
+    for t in trains:
+        assert t.compute_time == pytest.approx(steps * train_s)
+        assert wf.files[t.outputs[0]].size == ckpt
+        # every epoch re-reads all shards
+        assert set(t.inputs) >= {s.outputs[0] for s in tokenize}
+
+    # eval prices prefill + decode off the same rows and exports the ckpt
+    (ev,) = evals
+    expect = EVAL_REQUESTS * (step_seconds(reports["prefill"])
+                              + EVAL_DECODE_TOKENS
+                              * step_seconds(reports["decode"]))
+    assert ev.compute_time == pytest.approx(expect)
+    assert ev.dfs_outputs == ckpt
+
+
+def test_roofline_rows_are_finalized_and_sane():
+    for arch in ARCH_OF.values():
+        reports = mlpipe_stages(arch)
+        cfg = get_config(arch)
+        for kind, r in reports.items():
+            assert r.compute_s > 0 and r.memory_s > 0
+            assert r.bottleneck in ("compute", "memory", "collective")
+            assert step_seconds(r) == max(r.compute_s, r.memory_s,
+                                          r.collective_s)
+            assert r.model_flops_global > 0
+        # train moves more bytes and flops than a single decode step
+        assert (reports["train"].flops_per_device
+                > reports["decode"].flops_per_device)
+        assert checkpoint_bytes(cfg) > 0
+        # single-chip rows have no collective term
+        assert reports["train"].collective_s == 0.0
+
+
+def test_dp_collective_term_appears_at_multi_chip():
+    one = mlpipe_stages("deepseek-7b", chips=1)["train"]
+    four = mlpipe_stages("deepseek-7b", chips=4)["train"]
+    assert four.collective_s > 0.0
+    assert four.flops_per_device == pytest.approx(one.flops_per_device / 4)
+
+
+def test_scale_controls_shards_and_epochs():
+    small = mlpipe("mamba2-780m", scale=0.25, seed=0)
+    big = mlpipe("mamba2-780m", scale=1.0, seed=0)
+    n = lambda wf, kind: sum(1 for t in wf.tasks.values()
+                             if t.abstract == kind)
+    assert n(small, "tokenize") == 2 and n(big, "tokenize") == 8
+    assert n(small, "train") == 1 and n(big, "train") == 2
+
+
+@pytest.mark.parametrize("strategy", ["orig", "wow"])
+def test_mlpipe_runs_end_to_end(strategy):
+    wf = make_workflow("mlpipe_mamba", scale=0.3, seed=2)
+    res = run_workflow(wf, strategy=strategy, n_nodes=8)
+    assert res.tasks_total == len(wf.tasks)
+    assert res.makespan > 0
