@@ -589,6 +589,157 @@ def run_e2e_vectorized(sizes: list[tuple[int, float]] | None = None,
     return rows, headline
 
 
+# ------------------------------------------------- hierarchical topology
+# Same full-workflow runs as sim_throughput, but under the hierarchical
+# topology layer (sim/topology.py): flat vs 2-level (racks, oversubscribed
+# uplinks) vs multi-site (racks + shared cores + WAN).  Three measurements:
+#
+# * per-(size, topology, strategy) rows with makespan, events/sec and the
+#   per-locality-tier traffic split (``tier_bytes``) -- the paper-side
+#   point: WOW's locality-aware placement keeps bytes off the
+#   oversubscribed tiers, the DFS-bound baselines pay them;
+# * an oversubscription sweep at the smallest size asserting the
+#   WOW-vs-orig makespan gap *widens* as the rack uplinks shrink;
+# * heap-vs-scan fill at the largest oversubscribed point: bit-identical
+#   makespans asserted, and the path-constrained heap fill must stay
+#   >= ``_TOPO_FILL_MIN_SPEEDUP``x the scan fill in events/sec (full tier
+#   only -- the smoke tier runs both fills but skips the ratio floor).
+TOPO_SIZES = [(256, 2.56), (1024, 10.24)]
+TOPO_SMOKE_SIZES = [(256, 2.56)]
+TOPO_CONFIGS: dict[str, dict | None] = {
+    "flat": None,
+    "rack": {"rack_size": 32, "oversubscription": 8.0},
+    "site": {"rack_size": 32, "racks_per_site": 4, "oversubscription": 8.0,
+             "core_oversubscription": 2.0},
+}
+TOPO_SWEEP_OVERSUB = [1.0, 4.0, 16.0]
+_TOPO_FILL_MIN_SPEEDUP = 2.0
+
+
+def run_topology(sizes: list[tuple[int, float]] | None = None,
+                 ) -> tuple[list[dict], dict]:
+    """Topology-aware end-to-end runs; returns (rows, headline)."""
+    from repro.sim import SimConfig, Simulation, TopologySpec
+    from repro.workloads import make_workflow
+
+    smoke = bench_smoke()
+    if sizes is None:
+        sizes = TOPO_SMOKE_SIZES if smoke else TOPO_SIZES
+
+    def one(n_nodes, scale, strat, spec, fill="heap"):
+        wf = make_workflow(SIM_WORKFLOW, scale=scale)
+        cfg = SimConfig(n_nodes=n_nodes, dfs="ceph", topology=spec,
+                        flow_fill=fill)
+        t0 = time.perf_counter()
+        r = Simulation(wf, cfg, strat).run()
+        return r, time.perf_counter() - t0
+
+    rows: list[dict] = []
+    makespans: dict[tuple[int, str, str], float] = {}
+    emit("scheduler_scale,topology,strategy,nodes,topo,fill,wall_s,events,"
+         "events_per_s,makespan,network_bytes,wan_bytes")
+    for n_nodes, scale in sizes:
+        for topo_name, params in TOPO_CONFIGS.items():
+            spec = TopologySpec(**params) if params else None
+            for strat in ("orig", "cws", "wow"):
+                r, wall = one(n_nodes, scale, strat, spec)
+                makespans[(n_nodes, topo_name, strat)] = r.makespan
+                rows.append({
+                    "impl": strat, "scenario": "topology", "nodes": n_nodes,
+                    "topo": topo_name, "fill": "heap", "wall_s": wall,
+                    "events": r.sim_steps,
+                    "events_per_s": r.sim_steps / max(wall, 1e-9),
+                    "makespan": r.makespan,
+                    "network_bytes": r.network_bytes,
+                    "tier_bytes": dict(r.tier_bytes),
+                })
+                emit(f"scheduler_scale,topology,{strat},{n_nodes},"
+                     f"{topo_name},heap,{wall:.2f},{r.sim_steps},"
+                     f"{r.sim_steps / max(wall, 1e-9):.0f},"
+                     f"{r.makespan:.2f},{r.network_bytes:.0f},"
+                     f"{r.tier_bytes.get('wan', 0.0):.0f}")
+
+    # --- oversubscription sweep: the WOW advantage must widen as the rack
+    # uplinks shrink (smallest size keeps the sweep affordable everywhere)
+    n_sweep, scale_sweep = sizes[0]
+    gaps: dict[float, float] = {}
+    for ov in TOPO_SWEEP_OVERSUB:
+        spec = TopologySpec(rack_size=32, oversubscription=ov)
+        ms: dict[str, float] = {}
+        for strat in ("orig", "wow"):
+            r, wall = one(n_sweep, scale_sweep, strat, spec)
+            ms[strat] = r.makespan
+            rows.append({
+                "impl": strat, "scenario": "topology_sweep",
+                "nodes": n_sweep, "oversubscription": ov, "wall_s": wall,
+                "makespan": r.makespan,
+                "tier_bytes": dict(r.tier_bytes),
+            })
+        gaps[ov] = ms["orig"] / max(ms["wow"], 1e-9)
+        emit(f"scheduler_scale,topology_sweep,{n_sweep},oversub,{ov},"
+             f"orig,{ms['orig']:.2f},wow,{ms['wow']:.2f},"
+             f"gap,{gaps[ov]:.2f}x")
+    seq = [gaps[ov] for ov in TOPO_SWEEP_OVERSUB]
+    assert all(b >= a - 1e-9 for a, b in zip(seq, seq[1:])), (
+        f"topology: WOW-vs-orig makespan gap did not widen with "
+        f"oversubscription: {gaps}")
+
+    # --- heap vs scan on the most path-constrained point run (site
+    # topology, largest size): bit-identity plus the events/sec floor
+    n_fill, scale_fill = sizes[-1]
+    spec = TopologySpec(**TOPO_CONFIGS["site"])
+    fill_eps: dict[str, float] = {}
+    fill_res: dict[str, object] = {}
+    for fill in ("heap", "scan"):
+        r, wall = one(n_fill, scale_fill, "orig", spec, fill=fill)
+        fill_eps[fill] = r.sim_steps / max(wall, 1e-9)
+        fill_res[fill] = r
+        rows.append({
+            "impl": "orig", "scenario": "topology", "nodes": n_fill,
+            "topo": "site", "fill": fill, "wall_s": wall,
+            "events": r.sim_steps, "events_per_s": fill_eps[fill],
+            "makespan": r.makespan, "network_bytes": r.network_bytes,
+            "tier_bytes": dict(r.tier_bytes),
+        })
+        emit(f"scheduler_scale,topology,orig,{n_fill},site,{fill},"
+             f"{wall:.2f},{r.sim_steps},{fill_eps[fill]:.0f},"
+             f"{r.makespan:.2f},{r.network_bytes:.0f},"
+             f"{r.tier_bytes.get('wan', 0.0):.0f}")
+    rh, rs = fill_res["heap"], fill_res["scan"]
+    assert rh.makespan == rs.makespan, (
+        f"topology@{n_fill}: heap fill changed the makespan under topology")
+    assert rh.sim_steps == rs.sim_steps, (
+        f"topology@{n_fill}: heap fill changed the event count")
+    fill_speedup = fill_eps["heap"] / max(fill_eps["scan"], 1e-9)
+    emit(f"scheduler_scale,topology_fill_speedup_{n_fill}n,"
+         f"{fill_speedup:.1f}x")
+    if not smoke:
+        assert fill_speedup >= _TOPO_FILL_MIN_SPEEDUP, (
+            f"topology@{n_fill}: path-constrained heap fill only "
+            f"{fill_speedup:.2f}x the scan fill (floor "
+            f"{_TOPO_FILL_MIN_SPEEDUP}x)")
+
+    head_nodes = max(n for n, _ in sizes)
+    headline = {
+        "workflow": SIM_WORKFLOW,
+        "sizes": [n for n, _ in sizes],
+        "configs": {k: (v or {}) for k, v in TOPO_CONFIGS.items()},
+        "makespans": {f"{n}:{t}:{s}": m
+                      for (n, t, s), m in sorted(makespans.items())},
+        "oversub_gap": {str(ov): gaps[ov] for ov in TOPO_SWEEP_OVERSUB},
+        "gap_widens": True,
+        "fill_nodes": n_fill,
+        "fill_speedup": fill_speedup,
+        "wow_vs_orig_site": (
+            makespans[(head_nodes, "site", "orig")]
+            / max(makespans[(head_nodes, "site", "wow")], 1e-9)),
+        "wow_vs_orig_flat": (
+            makespans[(head_nodes, "flat", "orig")]
+            / max(makespans[(head_nodes, "flat", "wow")], 1e-9)),
+    }
+    return rows, headline
+
+
 # ------------------------------------------- open-loop multi-tenant traffic
 # Three tenants sharing one cluster under a seeded Poisson arrival stream:
 # a weight-2 "batch" tenant (group/fork patterns), a weight-1 "ml" tenant
@@ -666,6 +817,10 @@ def run_multi_tenant(sizes: list[int] | None = None,
                 "queue_depth_max": tres.queue_depth_max,
                 "queue_depth_mean": tres.queue_depth_mean,
                 "horizon": tres.horizon,
+                # per-arrival scheduler-churn profile (dirty sets + solver /
+                # flow recompute counters); raw samples dropped: rows lean
+                "churn": {k: v for k, v in tres.churn.items()
+                          if k != "samples"},
                 "per_tenant": {t: {k: d[k] for k in
                                    ("admitted", "rejected", "completed",
                                     "p99", "starved", "service_cpu_s")}
@@ -886,6 +1041,11 @@ def main() -> list[dict]:
     mt_rows, mt_head = run_multi_tenant()
     rows.extend(mt_rows)
 
+    # hierarchical topology: flat vs rack vs multi-site, oversubscription
+    # sweep, heap-vs-scan fill on path-constrained flows
+    topo_rows, topo_head = run_topology()
+    rows.extend(topo_rows)
+
     # warm start on the declined-placement path (harness-only)
     warm = run_warmstart()
     rows.append({"impl": "incremental-solver", "scenario": "warmstart_declined",
@@ -925,6 +1085,7 @@ def main() -> list[dict]:
                      "scale_speedup": rec_head["scale_speedup"],
                      "e2e_vectorized": e2e_head,
                      "multi_tenant": mt_head,
+                     "topology": topo_head,
                      "warmstart": warm,
                      "dfs_churn": churn,
                      "solver_stats": headline_stats},

@@ -77,6 +77,10 @@ class DataPlacementService:
         self._files: dict[int, FileSpec] = {}
         self._locations: dict[int, set[NodeId]] = {}
         self._rng = random.Random(seed)
+        # hierarchical topology (sim/topology.py); None (or flat) keeps the
+        # original byte-count cost model and the exact pre-topology RNG
+        # stream -- see set_topology
+        self._topo = None
         self._next_cop_id = 0
         # canonical node enumeration order (core.readyset.NodeOrder) shared
         # with the environment/scheduler; None falls back to ascending ids
@@ -103,6 +107,66 @@ class DataPlacementService:
         self._free_rep: dict[int, int] = {}            # file -> free replicas
         self._unsourced: dict[int, int] = {}           # task -> sourceless inputs
         self._blocked_dirty: set[int] = set()
+
+    # -------------------------------------------------------------- topology
+    def set_topology(self, topology) -> None:
+        """Attach a hierarchical :class:`~repro.sim.topology.Topology`.
+
+        With a non-uniform topology attached, :meth:`plan_cop` prefers
+        minimum-distance sources (rack before site before WAN) and prices
+        traffic by locality-weighted bytes, and
+        :meth:`locality_missing_cost` becomes the scheduler's step-2/3
+        candidate metric.  ``None`` or a flat topology detaches: every code
+        path and RNG draw is then bit-identical to the pre-topology DPS
+        (golden-tested)."""
+        self._topo = topology if (topology is not None
+                                  and topology.nonuniform) else None
+
+    def locality_missing_cost(self, task_id: int, node: NodeId) -> float:
+        """Topology-weighted cost of the bytes a (tracked) task still
+        misses on ``node``: each missing input contributes
+        ``size * multiplicity * weight`` where weight is the cheapest
+        locality tier any replica holder offers (``max_weight`` when the
+        file has no holder at all -- worst-case placement assumption).
+        Without a topology this is plain ``missing_bytes_task``."""
+        topo = self._topo
+        if topo is None:
+            return float(self.missing_bytes_task(task_id, node))
+        cost = 0.0
+        for f, m in self._task_mult[task_id].items():
+            locs = self._locations.get(f, _EMPTY)
+            if node in locs:
+                continue
+            spec = self._files.get(f)
+            size = spec.size if spec is not None else 0
+            w = min(topo.weight(s, node) for s in locs) if locs \
+                else topo.max_weight
+            cost += size * m * w
+        return cost
+
+    def locality_missing_cost_reference(self, input_ids: tuple[int, ...],
+                                        node: NodeId) -> float:
+        """From-scratch :meth:`locality_missing_cost` over a raw input
+        tuple (per-occurrence, like ``missing_bytes``) -- the reference
+        scheduler's form, and the equivalence oracle for the tracked one."""
+        topo = self._topo
+        if topo is None:
+            return float(self.missing_bytes(input_ids, node))
+        cost = 0.0
+        for f in input_ids:
+            locs = self._locations.get(f, _EMPTY)
+            if node in locs:
+                continue
+            spec = self._files.get(f)
+            size = spec.size if spec is not None else 0
+            w = min(topo.weight(s, node) for s in locs) if locs \
+                else topo.max_weight
+            cost += size * w
+        return cost
+
+    @property
+    def topology(self):
+        return self._topo
 
     # ------------------------------------------------------- index plumbing
     def _free_rep_up(self, file_id: int) -> None:
@@ -526,9 +590,11 @@ class DataPlacementService:
             return None
         missing = sorted(self.missing_files(input_ids, target),
                          key=lambda f: (-f.size, f.id))
+        topo = self._topo
         transfers: list[Transfer] = []
         load: dict[NodeId, int] = {}
         total = 0
+        wtotal = 0.0
         for f in missing:
             srcs = self._locations.get(f.id, set())
             if allowed_sources is not None:
@@ -538,6 +604,12 @@ class DataPlacementService:
             srcs.discard(target)
             if not srcs:
                 return None
+            if topo is not None:
+                # locality first: only minimum-distance replicas compete on
+                # load (rack beats site beats WAN regardless of load)
+                wbest = min(topo.weight(s, target) for s in srcs)
+                srcs = {s for s in srcs if topo.weight(s, target) == wbest}
+                wtotal += f.size * wbest
             lo = min(load.get(s, 0) for s in srcs)
             pool = [s for s in sorted(srcs) if load.get(s, 0) == lo]
             src = pool[self._rng.randrange(len(pool))] if len(pool) > 1 else pool[0]
@@ -545,7 +617,8 @@ class DataPlacementService:
             load[src] = load.get(src, 0) + f.size
             total += f.size
         load[target] = total  # the target receives everything
-        price = W_TRAFFIC * total + W_MAXLOAD * (max(load.values()) if load else 0)
+        traffic = wtotal if topo is not None else total
+        price = W_TRAFFIC * traffic + W_MAXLOAD * (max(load.values()) if load else 0)
         plan = CopPlan(id=self._next_cop_id, task_id=task_id, target=target,
                        transfers=transfers, price=price)
         self._next_cop_id += 1

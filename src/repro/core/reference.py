@@ -170,9 +170,13 @@ class ReferenceWowScheduler:
             ]
             if not cands:
                 continue
-            # earliest start ~ fewest missing bytes (paper §IV-C)
+            # earliest start ~ fewest missing bytes (paper §IV-C); under a
+            # hierarchical topology, locality-weighted missing bytes.  The
+            # reference form returns the plain byte count as a float when no
+            # topology is attached, so the flat-mode sort order (and hence
+            # the action stream) is unchanged.
             cands.sort(key=lambda n: (
-                self.dps.missing_bytes_reference(t.inputs, n), n))
+                self.dps.locality_missing_cost_reference(t.inputs, n), n))
             for n in cands:
                 plan = self.dps.plan_cop(t.id, t.inputs, n, allowed_src)
                 if plan is not None:

@@ -706,13 +706,19 @@ class WowScheduler:
             # candidates hold none of the task's inputs and share the key
             # (task_bytes, n), so when *no* node holds input bytes the sort
             # degenerates to plain id order -- same result, no key calls.
-            present = dps.present_bytes_map(tid)
-            if present:
-                tb = dps.task_input_bytes(tid)
-                get = present.get
-                cands.sort(key=lambda n: (tb - get(n, 0), n))
+            # Under a hierarchical topology the metric is locality-weighted
+            # missing bytes: a same-rack replica beats a WAN one.
+            if dps.topology is not None:
+                cost = dps.locality_missing_cost
+                cands.sort(key=lambda n: (cost(tid, n), n))
             else:
-                cands.sort()
+                present = dps.present_bytes_map(tid)
+                if present:
+                    tb = dps.task_input_bytes(tid)
+                    get = present.get
+                    cands.sort(key=lambda n: (tb - get(n, 0), n))
+                else:
+                    cands.sort()
             for n in cands:
                 plan = dps.plan_cop(tid, t.inputs, n, self._free_slot_nodes,
                                     feasible_targets=feas)

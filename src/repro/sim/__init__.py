@@ -7,16 +7,18 @@ from .metrics import (SimResult, TrafficResult, compute_traffic_result,
 from .network import Flow, FlowManager, ReferenceFlowManager, build_links
 from .strategies import (BaseStrategy, CwsStrategy, OrigStrategy,
                          WowStrategy, make_strategy)
-from .traffic import (ArrivalSpec, InstanceRecord, TenantSpec,
+from .topology import Topology, TopologySpec
+from .traffic import (ArrivalSpec, InstanceRecord, RetryPolicy, TenantSpec,
                       TrafficConfig, arrival_schedule)
 from .workflow import Workflow
 
 __all__ = [
     "ArrivalSpec", "BaseStrategy", "CephModel", "CwsStrategy",
     "DeadlockError", "DfsModel", "Flow", "FlowManager", "InstanceRecord",
-    "NfsModel", "OrigStrategy", "ReferenceFlowManager", "SimConfig",
-    "SimResult", "Simulation", "TenantSpec", "TrafficConfig",
-    "TrafficResult", "Workflow", "WowStrategy", "arrival_schedule",
-    "build_links", "compute_traffic_result", "efficiency", "gini", "jain",
+    "NfsModel", "OrigStrategy", "ReferenceFlowManager", "RetryPolicy",
+    "SimConfig", "SimResult", "Simulation", "TenantSpec", "Topology",
+    "TopologySpec", "TrafficConfig", "TrafficResult", "Workflow",
+    "WowStrategy", "arrival_schedule", "build_links",
+    "compute_traffic_result", "efficiency", "gini", "jain",
     "make_strategy", "percentile", "run_traffic", "run_workflow",
 ]

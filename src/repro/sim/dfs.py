@@ -127,10 +127,16 @@ class CephModel(DfsModel):
     name = "ceph"
 
     def __init__(self, n_nodes: int, replication: int = 2,
-                 seed: int = 0) -> None:
+                 seed: int = 0, topology=None) -> None:
         self.n_nodes = n_nodes
         self.replication = min(replication, n_nodes)
         self._rng = random.Random(seed)
+        # hierarchical topology (sim/topology.py): replicas spread across
+        # racks (CRUSH-style failure domains) and reads pick the nearest
+        # replica.  None -- or a flat topology -- keeps every code path and
+        # RNG draw bit-identical to the pre-topology model (golden-tested).
+        self._topo = topology if (topology is not None
+                                  and topology.nonuniform) else None
         # live placement universe, in join order; failure-free it is exactly
         # [0..n_nodes) so rng.sample draws the pre-churn bit stream
         self._nodes: list[int] = list(range(n_nodes))
@@ -149,11 +155,32 @@ class CephModel(DfsModel):
         self.degraded_read_bytes = 0.0
 
     # -------------------------------------------------------------- placement
+    def _place_spread(self, k: int) -> tuple[int, ...]:
+        """Rack-aware placement: each successive replica prefers a rack not
+        already holding one (CRUSH-style failure-domain spreading), with a
+        uniform seeded draw inside the candidate pool."""
+        topo = self._topo
+        chosen: list[int] = []
+        used_racks: set[int] = set()
+        pool = list(self._nodes)
+        for _ in range(k):
+            cands = [n for n in pool if topo.rack_of(n) not in used_racks]
+            if not cands:
+                cands = pool
+            n = cands[self._rng.randrange(len(cands))]
+            chosen.append(n)
+            pool.remove(n)
+            used_racks.add(topo.rack_of(n))
+        return tuple(chosen)
+
     def _place(self, file_id: int) -> tuple[int, ...]:
         reps = self._placement.get(file_id)
         if reps is None:
             k = min(self.replication, len(self._nodes))
-            reps = tuple(self._rng.sample(self._nodes, k))
+            if self._topo is None:
+                reps = tuple(self._rng.sample(self._nodes, k))
+            else:
+                reps = self._place_spread(k)
             self._placement[file_id] = reps
             self._intended[file_id] = k
         return reps
@@ -215,6 +242,14 @@ class CephModel(DfsModel):
                                     size)]
         if reader in replicas:
             r = reader
+        elif self._topo is not None:
+            # nearest-replica read: among minimum-distance replicas, seeded
+            # uniform tie-break (no draw when the choice is forced)
+            topo = self._topo
+            best = min(topo.distance(s, reader) for s in replicas)
+            pool = [s for s in replicas if topo.distance(s, reader) == best]
+            r = pool[self._rng.randrange(len(pool))] if len(pool) > 1 \
+                else pool[0]
         else:
             r = replicas[self._rng.randrange(len(replicas))]
         return [self._read_path(r, reader, size)]
@@ -262,8 +297,22 @@ class CephModel(DfsModel):
         cands = [n for n in self._nodes if n not in holders]
         if not cands:
             return None
-        src = reps[self._rng.randrange(len(reps))]
-        dst = cands[self._rng.randrange(len(cands))]
+        if self._topo is None:
+            src = reps[self._rng.randrange(len(reps))]
+            dst = cands[self._rng.randrange(len(cands))]
+        else:
+            # restore the failure-domain spread: land the new replica in a
+            # rack not already holding one (when possible), then serve it
+            # from the closest surviving holder
+            topo = self._topo
+            holder_racks = {topo.rack_of(r) for r in reps}
+            dpool = [n for n in cands
+                     if topo.rack_of(n) not in holder_racks] or cands
+            dst = dpool[self._rng.randrange(len(dpool))]
+            best = min(topo.distance(s, dst) for s in reps)
+            spool = [s for s in reps if topo.distance(s, dst) == best]
+            src = spool[self._rng.randrange(len(spool))] if len(spool) > 1 \
+                else spool[0]
         self._pending_repair[file_id] = (src, dst)
         return (file_id, src, dst, self._sizes.get(file_id, 0))
 

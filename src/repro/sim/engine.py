@@ -24,6 +24,7 @@ from .dfs import CephModel, DfsModel, NfsModel
 from .metrics import SimResult, TrafficResult, compute_traffic_result, gini
 from .network import FlowManager, ReferenceFlowManager, build_links
 from .strategies import BaseStrategy, WowStrategy, make_strategy
+from .topology import Topology, TopologySpec
 from .traffic import ArrivalSpec, InstanceRecord, TrafficConfig, \
     arrival_schedule
 from .workflow import Workflow
@@ -59,6 +60,10 @@ class SimConfig:
     # numpy is importable), False = retained dict oracle.  Decisions are
     # bit-identical either way (DESIGN.md "Vectorized hot state").
     vectorized: bool | None = None
+    # hierarchical topology (sim/topology.py): nodes -> racks -> sites with
+    # oversubscribed shared links.  None -- or a flat spec (single rack) --
+    # keeps the engine bit-identical to the pre-topology goldens.
+    topology: TopologySpec | None = None
 
 
 @dataclasses.dataclass
@@ -108,10 +113,20 @@ class Simulation:
         # may re-join under its old (lower) id and every layer still
         # enumerates it last, like the reference scheduler's dict scans
         self.node_order = NodeOrder(self.nodes)
+        # hierarchical topology: dropped entirely when flat (single rack),
+        # the one gate that keeps every downstream layer on the pre-topology
+        # code paths (and RNG streams) bit-identically
+        self.topo: Topology | None = None
+        if cfg.topology is not None:
+            topo = Topology(cfg.topology, cfg.n_nodes, cfg.net_bw)
+            if topo.nonuniform:
+                self.topo = topo
+        self.tier_bytes: dict[str, float] = {}
         self.strategy: BaseStrategy = make_strategy(
             strategy, self.nodes, c_node=cfg.c_node, c_task=cfg.c_task,
             seed=cfg.seed, reference_core=cfg.reference_core,
-            node_order=self.node_order, vectorized=cfg.vectorized)
+            node_order=self.node_order, vectorized=cfg.vectorized,
+            topology=self.topo)
 
         extra: tuple[int, ...] = ()
         self.nfs_server = cfg.n_nodes
@@ -119,14 +134,16 @@ class Simulation:
             extra = (self.nfs_server,)
             self.dfs: DfsModel = NfsModel(self.nfs_server)
         elif cfg.dfs == "ceph":
-            self.dfs = CephModel(cfg.n_nodes, cfg.ceph_replication, cfg.seed)
+            self.dfs = CephModel(cfg.n_nodes, cfg.ceph_replication, cfg.seed,
+                                 topology=self.topo)
         else:
             raise ValueError(f"unknown dfs {cfg.dfs!r}")
         caps = build_links(cfg.n_nodes, cfg.net_bw, cfg.disk_read_bw,
                            cfg.disk_write_bw, extra_nodes=extra,
                            extra_net_bw=cfg.net_bw,
                            extra_disk_read_bw=cfg.nfs_disk_read_bw,
-                           extra_disk_write_bw=cfg.nfs_disk_write_bw)
+                           extra_disk_write_bw=cfg.nfs_disk_write_bw,
+                           topology=self.topo)
         if cfg.reference_flow:
             self.fm: FlowManager | ReferenceFlowManager = \
                 ReferenceFlowManager(caps)
@@ -174,6 +191,13 @@ class Simulation:
         self._depth_samples: list[tuple[float, int, int]] = []
         self._live_instances = 0
         self._retired_instances = 0
+        # closed-loop retry (TenantSpec.retry): scheduled re-submissions
+        self._retries: list[tuple[float, str]] = []
+        self._tenant_retry = ({t.name: t.retry for t in self.traffic.tenants
+                               if t.retry is not None}
+                              if self.traffic else {})
+        # per-arrival scheduler-churn samples (dirty sets, solver, flows)
+        self._churn_samples: list[dict] = []
         # id-namespace allocation cursors: instance k's local ids are
         # rebased onto [base, base+span) so concurrent instances never
         # collide with each other or with a t=0 workflow
@@ -194,9 +218,18 @@ class Simulation:
     def _add_flow(self, links, nbytes: float, tag) -> int | None:
         if nbytes <= 0:
             return None
-        f = self.fm.add(tuple(links), nbytes, tag)
+        links = tuple(links)
+        if self.topo is not None:
+            # splice rack/core/WAN links into every up->down hop; a
+            # same-rack transfer expands to itself
+            links = self.topo.expand(links)
+        f = self.fm.add(links, nbytes, tag)
         if any(l[0] == "up" for l in links):
             self.network_bytes += nbytes
+            if self.topo is not None:
+                tier = self.topo.tier(links)
+                self.tier_bytes[tier] = (self.tier_bytes.get(tier, 0.0)
+                                         + nbytes)
         return f.id
 
     def _drop_flow(self, flow_id: int) -> None:
@@ -207,7 +240,10 @@ class Simulation:
         if f is None:
             return
         if any(l[0] == "up" for l in f.links):
-            self.network_bytes -= self.fm.unsent(flow_id)
+            unsent = self.fm.unsent(flow_id)
+            self.network_bytes -= unsent
+            if self.topo is not None:
+                self.tier_bytes[self.topo.tier(f.links)] -= unsent
         self.fm.remove(flow_id)
         self._read_ctx.pop(flow_id, None)
 
@@ -541,6 +577,9 @@ class Simulation:
                          ("dr", self.cfg.disk_read_bw),
                          ("dw", self.cfg.disk_write_bw)):
             self.fm.capacities[(kind, node_id)] = bw
+        if self.topo is not None:
+            # a join may open a brand-new rack/site: materialise its links
+            self.topo.ensure_node(node_id, self.fm.capacities)
         self.dfs.add_node(node_id)      # joins the placement universe
         self.strategy.on_node_added(node_id)
 
@@ -560,6 +599,14 @@ class Simulation:
         if (tr.max_backlog is not None
                 and self._live_instances >= tr.max_backlog):
             self._rejections.append((self.time, spec.tenant))
+            policy = self._tenant_retry.get(spec.tenant)
+            if policy is not None and spec.attempt + 1 < policy.max_attempts:
+                # closed-loop client: re-submit the same instance (same
+                # index / workflow / builder seed) after a seeded backoff
+                delay = policy.delay(spec.seed, spec.attempt)
+                retry = dataclasses.replace(spec, attempt=spec.attempt + 1)
+                self._retries.append((self.time + delay, spec.tenant))
+                self._push_timer(self.time + delay, "arrive", retry)
             return
         from ..workloads import make_workflow  # lazy: package cycle
         template = make_workflow(spec.workflow, scale=spec.scale,
@@ -573,7 +620,8 @@ class Simulation:
         rec = InstanceRecord(
             id=spec.index, tenant=spec.tenant, workflow=spec.workflow,
             arrival_t=self.time, n_tasks=len(inst.tasks),
-            task_ids=frozenset(inst.tasks), remaining=len(inst.tasks))
+            task_ids=frozenset(inst.tasks), remaining=len(inst.tasks),
+            attempts=spec.attempt + 1)
         self._instances[spec.index] = rec
         self._instance_abstracts[spec.index] = set(inst.abstract_edges)
         self._live_instances += 1
@@ -591,6 +639,14 @@ class Simulation:
         for t in inst.tasks.values():
             if self.remaining_inputs[t.id] == 0:
                 self._submit(t)
+        # cross-workflow churn profile: sample the scheduler's dirty sets
+        # and cumulative solver/flow counters right after the arrival lands
+        # (before the next iterate() drains them)
+        sample: dict = {"t": self.time, "instance": spec.index}
+        sample.update(self.strategy.churn_probe())
+        if hasattr(self.fm, "health"):
+            sample["flow_recomputes"] = int(self.fm.health()["recomputes"])
+        self._churn_samples.append(sample)
 
     def _traffic_task_done(self, tid: int, start: float, end: float,
                            cores: float) -> None:
@@ -683,6 +739,27 @@ class Simulation:
                         "blocked": blocked, "reason": reason})
         return out
 
+    def _churn_summary(self) -> dict:
+        """Aggregate the per-arrival churn samples: dirty-set statistics
+        plus cumulative-counter-per-arrival rates, and the raw samples (the
+        arrival stream is bounded, so the list stays small)."""
+        samples = self._churn_samples
+        if not samples:
+            return {}
+        out: dict = {"arrivals_sampled": len(samples)}
+        dirty = [s["dirty_tasks"] for s in samples if "dirty_tasks" in s]
+        if dirty:
+            out["dirty_tasks_mean"] = sum(dirty) / len(dirty)
+            out["dirty_tasks_max"] = max(dirty)
+        for key, rate_key in (("solver_events", "solver_events_per_arrival"),
+                              ("flow_recomputes",
+                               "flow_recomputes_per_arrival")):
+            vals = [s[key] for s in samples if key in s]
+            if vals:
+                out[rate_key] = vals[-1] / len(vals)
+        out["samples"] = samples
+        return out
+
     def traffic_result(self) -> TrafficResult:
         if self.traffic is None:
             raise RuntimeError("simulation was not run with a TrafficConfig")
@@ -690,7 +767,8 @@ class Simulation:
             self.traffic, sorted(self._instances.values(),
                                  key=lambda r: r.id),
             self._rejections, self._depth_samples, end_time=self.time,
-            incomplete=self._traffic_incomplete())
+            incomplete=self._traffic_incomplete(),
+            retries=self._retries, churn=self._churn_summary())
 
     # ------------------------------------------------------------------ run
     def run(self, max_steps: int = 50_000_000) -> SimResult:
@@ -845,6 +923,7 @@ class Simulation:
             flow_recomputes=int(fm_health["recomputes"]),
             flow_compactions=int(fm_health["compactions"]),
             flow_mean_component=float(fm_health["mean_component"]),
+            tier_bytes=dict(self.tier_bytes),
         )
 
 

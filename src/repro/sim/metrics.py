@@ -49,6 +49,9 @@ class SimResult:
     flow_recomputes: int = 0            # non-trivial rate recomputes
     flow_compactions: int = 0           # ETA-heap rebuilds
     flow_mean_component: float = 0.0    # mean flows per recompute
+    # per-locality-tier traffic (hierarchical topology runs only;
+    # keys from Topology.TIERS that carried bytes: rack/site/wan)
+    tier_bytes: dict = dataclasses.field(default_factory=dict)
 
     @property
     def pct_no_cop(self) -> float:
@@ -131,6 +134,12 @@ class TrafficResult:
     incomplete: list[dict]              # admitted instances that never
                                         # finished, with residual state
     instances: list[dict] = dataclasses.field(default_factory=list)
+    # closed-loop clients (TenantSpec.retry): re-submissions scheduled
+    # after a rejection, and admitted instances that needed >1 attempt
+    retries: int = 0
+    retry_admitted: int = 0
+    # per-arrival scheduler churn profile (engine churn_probe samples)
+    churn: dict = dataclasses.field(default_factory=dict)
 
     def row(self) -> dict:
         d = dataclasses.asdict(self)
@@ -141,13 +150,19 @@ class TrafficResult:
 def compute_traffic_result(cfg, records, rejections, depth_samples,
                            end_time: float,
                            incomplete: list[dict] | None = None,
+                           retries: list | None = None,
+                           churn: dict | None = None,
                            ) -> TrafficResult:
     """Aggregate engine bookkeeping into a ``TrafficResult``.
 
     ``records``: InstanceRecord per *admitted* instance.
-    ``rejections``: (time, tenant) per admission-gate rejection.
+    ``rejections``: (time, tenant) per admission-gate rejection (retried
+    attempts that bounce again are counted once per bounce).
     ``depth_samples``: (time, pending_tasks, live_instances) sampled at
-    every arrival and instance completion."""
+    every arrival and instance completion.
+    ``retries``: (time, tenant) per scheduled retry re-submission.
+    ``churn``: per-arrival scheduler churn summary (engine-provided)."""
+    retries = list(retries or [])
     tenants = {t.name: t for t in cfg.tenants}
     incomplete = list(incomplete or [])
     completed = [r for r in records if r.completed_t is not None]
@@ -179,6 +194,7 @@ def compute_traffic_result(cfg, records, rejections, depth_samples,
             "arrivals": len(mine) + rej,
             "admitted": len(mine),
             "rejected": rej,
+            "retries": sum(1 for _, t in retries if t == name),
             "completed": len(done),
             "p50": percentile(lats, 50),
             "p99": percentile(lats, 99),
@@ -234,4 +250,8 @@ def compute_traffic_result(cfg, records, rejections, depth_samples,
         windows=windows,
         incomplete=incomplete,
         instances=[r.row() for r in records],
+        retries=len(retries),
+        retry_admitted=sum(1 for r in records
+                           if getattr(r, "attempts", 1) > 1),
+        churn=dict(churn or {}),
     )

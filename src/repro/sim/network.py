@@ -5,8 +5,19 @@ Every shared resource is a *link* with a byte/s capacity:
     ("up", n)   -- node n NIC egress          ("down", n) -- NIC ingress
     ("dr", n)   -- node n disk read           ("dw", n)   -- disk write
 
+and, under a hierarchical topology (sim/topology.py), the shared
+infrastructure layers those NIC hops traverse:
+
+    ("rku", r) / ("rkd", r)   -- rack r uplink/downlink (oversubscribable)
+    ("core", s)               -- site s shared core fabric
+    ("wanu", s) / ("wand", s) -- site s WAN egress/ingress
+
 A *flow* is a byte stream traversing a set of links (e.g. a COP transfer
-src->dst uses [dr src, up src, down dst, dw dst]).  Rates follow the classic
+src->dst uses [dr src, up src, down dst, dw dst]; with a topology the
+engine splices the rack/core/WAN path links between the up and down hop).
+Both fills below are agnostic to path length -- per-link bookkeeping is
+keyed by LinkId, so path-constrained flows share rack/core links exactly
+like node links.  Rates follow the classic
 progressive-filling max-min fair allocation: the most contended link fixes
 the fair share of its flows, capacities shrink, repeat.  This captures the
 paper's central network effects -- the NFS single-link saturation, COP
@@ -33,9 +44,17 @@ per recompute, near-global under congestion) with a share-ordered heap over
 links and per-link version counters for lazy invalidation, so a recompute
 costs O((F_comp + rounds) log L) while producing bit-identical rates (the
 heap key carries the link's first-flow insertion index, which is exactly
-the reference's tie-break).  The scan fill is retained as the ``fill="scan"``
+the reference's tie-break).  Hierarchical topologies add a third regime:
+shared rack/core links weld most flows into one component and collapse the
+fill into few rounds with huge freeze batches, where the link heap's
+per-freeze bookkeeping stops amortising -- once a shared hierarchy link has
+been seen and a component exceeds ``_VEC_MIN_MEMBERS`` link memberships the
+heap path switches to ``FlowManager._fill_vectorized``, a
+numpy dense-round fill over per-flow link-slot arrays with the same
+(share, insertion order) bottleneck rule (pure-python ``_heap_fill`` is the
+fallback without numpy).  The scan fill is retained as the ``fill="scan"``
 reference path (``SimConfig.flow_fill``) -- it *is* the pre-heap engine --
-and the two are property- and golden-tested against each other.
+and all paths are property- and golden-tested against each other.
 """
 from __future__ import annotations
 
@@ -43,6 +62,11 @@ import dataclasses
 import heapq
 import math
 from typing import Hashable
+
+try:                                    # vectorized fill path (optional)
+    import numpy as _np
+except Exception:                       # pragma: no cover - numpy is in CI
+    _np = None
 
 LinkId = tuple[str, int]
 
@@ -67,6 +91,9 @@ class Flow:
     rate: float = 0.0
     settled: float = 0.0           # virtual time `remaining` refers to
     epoch: int = 0                 # bumped whenever `rate` is reassigned
+    # link-slot index array for the vectorized fill (FlowManager.add);
+    # None under the pure-python paths / ReferenceFlowManager
+    slots: object = dataclasses.field(default=None, repr=False, compare=False)
 
     def eta(self) -> float:
         if self.remaining <= _DUST:
@@ -191,6 +218,23 @@ def _heap_fill(flows: list[Flow], capacities: dict[LinkId, float]) -> None:
 
 _FILLS = {"heap": _heap_fill, "scan": _progressive_fill}
 
+# The share-ordered link heap amortises when components stay small (flat
+# topology: a handful of flows per recompute).  Under a hierarchical
+# topology the shared rack/core links weld most flows into one component
+# and collapse the fill into few rounds with huge freeze batches -- there
+# the heap's per-freeze bookkeeping stops paying for itself, so past this
+# many link memberships (sum of path lengths over the component) the heap
+# path switches to the vectorized dense-round fill below (bit-identical;
+# see FlowManager._fill_vectorized).  The switch additionally requires a
+# shared hierarchy link to have been seen (_has_shared): flat components
+# can also grow large, but they freeze in many small rounds where the
+# dense per-round scans cost O(rounds * links) and the heap stays ahead.
+_VEC_MIN_MEMBERS = 512
+
+# link kinds private to a single node; anything else (rku/rkd/core/
+# wanu/wand) is shared infrastructure that can weld components
+_NODE_KINDS = frozenset(("up", "down", "dr", "dw"))
+
 
 class FlowManager:
     """Holds active flows and computes max-min fair rates incrementally.
@@ -212,6 +256,17 @@ class FlowManager:
             raise ValueError(f"unknown fill {fill!r}")
         self.fill = fill
         self._fill = _FILLS[fill]
+        # numpy-backed fast path for the heap fill on welded components;
+        # the scan fill stays the untouched pure-python reference
+        self._vec = _np is not None and fill == "heap"
+        self._slot: dict[LinkId, int] = {}      # link -> dense slot index
+        self._slot_links: list[LinkId] = []     # slot -> link
+        # slot -> capacity, snapshotted at slot creation.  Safe to cache:
+        # the engine only ever (re)writes a link's capacity with the same
+        # config-derived constant (_join_node / Topology.ensure_node).
+        self._slot_caps: list[float] = []
+        self._caps_np = None                    # lazily rebuilt array view
+        self._has_shared = False    # saw a non-node (hierarchy) link kind
         self.capacities = capacities
         self.flows: dict[int, Flow] = {}
         self._next_id = 0
@@ -240,6 +295,19 @@ class FlowManager:
         for l in links:
             self._link_flows.setdefault(l, set()).add(f.id)
         self._dirty_links.update(links)
+        if self._vec:
+            slot = self._slot
+            idxs = []
+            for l in links:
+                s = slot.get(l)
+                if s is None:
+                    slot[l] = s = len(self._slot_links)
+                    self._slot_links.append(l)
+                    self._slot_caps.append(self.capacities[l])
+                    if l[0] not in _NODE_KINDS:
+                        self._has_shared = True
+                idxs.append(s)
+            f.slots = _np.array(idxs, dtype=_np.int64)
         return f
 
     def remove(self, flow_id: int) -> None:
@@ -276,22 +344,141 @@ class FlowManager:
 
     def _component(self) -> list[Flow]:
         """Flows transitively sharing a link with any dirty link."""
-        seen_links: set[LinkId] = set()
-        comp: dict[int, Flow] = {}
-        stack = [l for l in self._dirty_links]
-        while stack:
-            l = stack.pop()
-            if l in seen_links:
-                continue
-            seen_links.add(l)
-            for fid in self._link_flows.get(l, ()):
-                if fid in comp:
-                    continue
-                f = self.flows[fid]
-                comp[fid] = f
-                stack.extend(f.links)
+        flows = self.flows
+        link_flows = self._link_flows
+        n_all = len(flows)
+        comp_ids: set[int] = set()
+        frontier: set[LinkId] = set(self._dirty_links)
+        seen_links: set[LinkId] = set(frontier)
+        # alternating bulk expansion (links -> flows -> links) instead of a
+        # per-membership stack walk: the set unions run at C speed, which
+        # matters once a hierarchical topology welds most flows into one
+        # component and the flood covers nearly everything every recompute
+        while frontier:
+            new_ids: set[int] = set()
+            for l in frontier:
+                s = link_flows.get(l)
+                if s:
+                    new_ids |= s
+            new_ids -= comp_ids
+            if not new_ids:
+                break
+            comp_ids |= new_ids
+            if len(comp_ids) == n_all:
+                break   # welded regime: the component already spans every
+                        # flow, so the rest of the flood cannot add any
+            next_links: set[LinkId] = set()
+            for fid in new_ids:
+                next_links.update(flows[fid].links)
+            next_links -= seen_links
+            seen_links |= next_links
+            frontier = next_links
         # ascending id == insertion order of the reference full recompute
-        return [comp[fid] for fid in sorted(comp)]
+        return [flows[fid] for fid in sorted(comp_ids)]
+
+    def _fill_vectorized(self, comp: list[Flow]) -> None:
+        """Dense-round progressive filling over a welded component.
+
+        Bit-identical to :func:`_progressive_fill` / :func:`_heap_fill`
+        but built for the regime a hierarchical topology creates: shared
+        rack/core links weld most flows into one component and freeze them
+        in few rounds with huge batches, where the share-ordered link heap's
+        per-freeze bookkeeping (set rebuilds, per-link discards and
+        re-keying) costs more than it saves.  Here per-link state lives in
+        dense arrays -- residual capacity, unfrozen-flow count and the
+        first-encounter order key -- and each round is a handful of
+        vectorized passes: recompute fair shares, pick the lexicographic
+        minimum of (share, insertion order) exactly like the reference
+        scan's first-strictly-smaller-wins iteration, then batch-apply the
+        freeze via ``np.subtract.at`` over the frozen flows' slot arrays.
+
+        Float identity: shares use the same IEEE-754 division; all
+        subtractions within a round use the same ``best_share`` so their
+        order cannot change the result; and clamping the whole residual
+        array at zero once per round equals the reference's per-step clamp
+        because subtraction of a non-negative share is monotone (once a
+        residual would go negative it ends the round at zero either way).
+        No per-fill python sets are built at all: each flow carries its
+        dense link-slot array (assigned once in ``add``), the component's
+        per-link membership comes from one ``np.bincount`` over the
+        concatenated slot arrays (no sort -- global slot space is dense),
+        and its CSR transpose drives the freeze batches, so per-flow
+        python work is exactly one rate assignment.
+        """
+        np = _np
+        if self._caps_np is None or len(self._caps_np) != len(self._slot_caps):
+            self._caps_np = np.array(self._slot_caps, dtype=np.float64)
+        segs = []
+        lens = []
+        for f in comp:
+            segs.append(f.slots)
+            lens.append(f.slots.size)
+        cat = np.concatenate(segs)
+        # slots_u: the component's links (closure => exactly the links its
+        # flows cross); counts: flows per link; inv: per-membership compact
+        # link index; first: position of each link's first membership in
+        # `cat`, i.e. the reference fills' insertion-order tie-break key.
+        # (A flow's links tuple never repeats a link -- engine invariant --
+        # so membership counts equal the reference's per-link set sizes.)
+        # All sort-free: bincount over the dense global slot space, a
+        # compact-index lookup table, and a reversed scatter for `first`
+        # (overlapping fancy-index writes land in index order, so writing
+        # descending positions leaves each link's smallest, exactly
+        # np.unique's return_index -- without its O(m log m) sort).
+        n_slots = len(self._slot_links)
+        dense = np.bincount(cat, minlength=n_slots)
+        slots_u = np.flatnonzero(dense)
+        counts = dense[slots_u]
+        lut = np.empty(n_slots, dtype=np.int64)
+        lut[slots_u] = np.arange(slots_u.size, dtype=np.int64)
+        inv = lut[cat]
+        first = np.empty(slots_u.size, dtype=np.int64)
+        first[inv[::-1]] = np.arange(cat.size - 1, -1, -1, dtype=np.int64)
+        n_flows = len(comp)
+        lens_arr = np.asarray(lens, dtype=np.int64)
+        offs = np.zeros(n_flows + 1, dtype=np.int64)
+        np.cumsum(lens_arr, out=offs[1:])
+        # CSR transpose of the membership matrix: for each compact link,
+        # the component positions of the flows that cross it -- freezing a
+        # bottleneck's flows is then one mask-and-gather instead of a
+        # python walk over the persistent link sets
+        flowpos = np.repeat(np.arange(n_flows, dtype=np.int64), lens_arr)
+        members = flowpos[np.argsort(inv, kind="stable")]
+        link_start = np.zeros(slots_u.size + 1, dtype=np.int64)
+        np.cumsum(counts, out=link_start[1:])
+        rcap = self._caps_np[slots_u]           # fresh gather => owned copy
+        count = counts.astype(np.int64, copy=True)  # live (unfrozen) counts
+        shares = np.empty(slots_u.size, dtype=np.float64)
+        big = np.iinfo(np.int64).max
+        frozen = np.zeros(n_flows, dtype=bool)
+        n_unfrozen = n_flows
+        while n_unfrozen:
+            shares.fill(math.inf)
+            np.divide(rcap, count, out=shares, where=count > 0)
+            best_share = float(shares.min())
+            if best_share == math.inf:
+                break
+            i = int(np.where(shares == best_share, first, big).argmin())
+            mem = members[link_start[i]:link_start[i + 1]]
+            new = mem[~frozen[mem]]
+            frozen[new] = True
+            n_unfrozen -= new.size
+            for p in new.tolist():
+                comp[p].rate = best_share
+            # membership indices of every newly-frozen flow (multi-range
+            # gather over the flows' segments of `inv`)
+            starts = offs[new]
+            cnt = lens_arr[new]
+            base = np.repeat(starts, cnt)
+            step = np.arange(base.size, dtype=np.int64) \
+                - np.repeat(np.cumsum(cnt) - cnt, cnt)
+            seg = inv[base + step]
+            # integer counts: a bincount subtraction is exact; the float
+            # residuals keep per-membership subtract.at so each link sees
+            # the same sequence of equal-value subtractions as the scan
+            count -= np.bincount(seg, minlength=count.size)
+            np.subtract.at(rcap, seg, best_share)
+            np.maximum(rcap, 0.0, out=rcap)
 
     def _push(self, f: Flow) -> None:
         if f.remaining <= _DUST:
@@ -333,17 +520,49 @@ class FlowManager:
             return
         self.recomputes += 1
         self.comp_flows_total += len(comp)
+        members = 0
         for f in comp:
+            members += len(f.links)
             # settle lazily-advanced byte counts before the rate changes
             if f.rate > 0 and self.now > f.settled:
                 f.remaining = max(f.remaining - f.rate * (self.now - f.settled),
                                   0.0)
             f.settled = self.now
-        self._fill(comp, self.capacities)
-        for f in comp:
-            f.epoch += 1
-            self._push(f)
-        self._maybe_compact()
+        if self._vec and self._has_shared and members >= _VEC_MIN_MEMBERS:
+            self._fill_vectorized(comp)
+        else:
+            self._fill(comp, self.capacities)
+        if len(comp) == len(self.flows):
+            # the component spans every live flow, so every existing heap
+            # entry is about to go stale: rebuild both ETA heaps from the
+            # fresh entries instead of pushing per flow and compacting the
+            # garbage later.  Observable behavior is identical -- the heaps
+            # hold the same live-entry multiset a push-per-flow would leave
+            # (pops always return the tuple minimum), just no dead weight.
+            now = self.now
+            completions: list[tuple[float, int, int]] = []
+            horizon: list[tuple[float, int, int]] = []
+            for f in comp:
+                f.epoch += 1
+                rem = f.remaining
+                if rem <= _DUST:
+                    completions.append((now, f.id, f.epoch))
+                    horizon.append((now, f.id, f.epoch))
+                elif f.rate > 0:
+                    settled = f.settled
+                    rate = f.rate
+                    completions.append(
+                        (settled + (rem - _DUST) / rate, f.id, f.epoch))
+                    horizon.append((settled + rem / rate, f.id, f.epoch))
+            heapq.heapify(completions)
+            heapq.heapify(horizon)
+            self._completions = completions
+            self._horizon = horizon
+        else:
+            for f in comp:
+                f.epoch += 1
+                self._push(f)
+            self._maybe_compact()
 
     def next_completion(self) -> tuple[float, Flow | None]:
         """(dt, flow) of the earliest finishing flow at current rates."""
@@ -426,8 +645,13 @@ class ReferenceFlowManager:
         self._dirty = True
 
     def flows_on_node(self, node: int) -> list[int]:
+        # kind guard: rack/site link ids (("rku", r), ...) share the int
+        # namespace with node ids; only the four per-node kinds count.
+        # Behaviour-identical on every flat-topology input (the only kinds
+        # that existed when this reference was frozen).
         return sorted(f.id for f in self.flows.values()
-                      if any(l[1] == node for l in f.links))
+                      if any(l[0] in ("up", "down", "dr", "dw")
+                             and l[1] == node for l in f.links))
 
     def unsent(self, flow_id: int) -> float:
         f = self.flows.get(flow_id)
@@ -475,9 +699,14 @@ def build_links(
     extra_net_bw: float | None = None,
     extra_disk_read_bw: float | None = None,
     extra_disk_write_bw: float | None = None,
+    topology=None,
 ) -> dict[LinkId, float]:
     """Standard link table: n compute nodes + optional extra (DFS server)
-    nodes with their own capacities."""
+    nodes with their own capacities.  ``topology`` (a
+    ``sim.topology.Topology``) additionally registers the rack/core/WAN
+    link capacities every listed node's flows may cross; a flat topology
+    (or None) registers nothing and the table is byte-identical to the
+    pre-topology one."""
     caps: dict[LinkId, float] = {}
     for n in range(n_nodes):
         caps[("up", n)] = net_bw
@@ -489,4 +718,9 @@ def build_links(
         caps[("down", n)] = extra_net_bw or net_bw
         caps[("dr", n)] = extra_disk_read_bw or disk_read_bw
         caps[("dw", n)] = extra_disk_write_bw or disk_write_bw
+    if topology is not None:
+        for n in range(n_nodes):
+            topology.ensure_node(n, caps)
+        for n in extra_nodes:
+            topology.ensure_node(n, caps)
     return caps

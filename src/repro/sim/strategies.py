@@ -56,6 +56,12 @@ class BaseStrategy:
         for a completed task so service-mode memory stays bounded."""
         pass
 
+    def churn_probe(self) -> dict:
+        """Cheap snapshot of scheduler-internal churn counters, sampled by
+        the engine after each traffic arrival (dirty-set / solver-activity
+        profiling).  DFS-bound baselines have no incremental core: empty."""
+        return {}
+
     def _reserve(self, t: TaskSpec, node: int) -> None:
         self.nodes[node].free_mem -= t.mem
         self.nodes[node].free_cores -= t.cores
@@ -148,11 +154,16 @@ class WowStrategy(BaseStrategy):
                  c_task: int = 2, seed: int = 0,
                  reference_core: bool = False,
                  node_order: NodeOrder | None = None,
-                 vectorized: bool | None = None) -> None:
+                 vectorized: bool | None = None,
+                 topology=None) -> None:
         super().__init__(nodes)
         if node_order is None:
             node_order = NodeOrder(nodes)
         self.dps = DataPlacementService(seed=seed, node_order=node_order)
+        if topology is not None:
+            # locality-aware COP sources + weighted cost model; a flat
+            # topology detaches inside set_topology (bit-identical runs)
+            self.dps.set_topology(topology)
         if reference_core:
             # the frozen reference has no vectorized path by design
             self.sched = ReferenceWowScheduler(
@@ -187,12 +198,28 @@ class WowStrategy(BaseStrategy):
     def forget_task(self, task_id: int) -> None:
         self._specs.pop(task_id, None)
 
+    def churn_probe(self) -> dict:
+        """Dirty-set sizes + cumulative solver event counter.  The
+        reference core keeps no dirty sets or solver stats
+        (getattr-guarded).  Counters only -- no wall-clock timings, so the
+        probe is replay-deterministic (bit-identical TrafficResults)."""
+        probe = {
+            "dirty_tasks": (
+                len(getattr(self.sched, "_dirty_tasks", ()))
+                + len(self.dps._dirty_tasks)),
+        }
+        stats = getattr(self.sched, "solver_stats", None)
+        if stats:
+            probe["solver_events"] = stats.get("events", 0)
+        return probe
+
 
 def make_strategy(name: str, nodes: dict[int, NodeState], *, c_node: int = 1,
                   c_task: int = 2, seed: int = 0,
                   reference_core: bool = False,
                   node_order: NodeOrder | None = None,
-                  vectorized: bool | None = None) -> BaseStrategy:
+                  vectorized: bool | None = None,
+                  topology=None) -> BaseStrategy:
     if name == "orig":
         return OrigStrategy(nodes)
     if name == "cws":
@@ -200,5 +227,6 @@ def make_strategy(name: str, nodes: dict[int, NodeState], *, c_node: int = 1,
     if name == "wow":
         return WowStrategy(nodes, c_node=c_node, c_task=c_task, seed=seed,
                            reference_core=reference_core,
-                           node_order=node_order, vectorized=vectorized)
+                           node_order=node_order, vectorized=vectorized,
+                           topology=topology)
     raise ValueError(f"unknown strategy {name!r}")

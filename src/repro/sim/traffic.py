@@ -19,10 +19,17 @@ supplies the engine's arrival side:
 Admission semantics (DESIGN.md "Open-loop traffic"): an arrival is admitted
 iff the number of live (admitted, not yet completed) instances is below
 ``max_backlog``; rejected arrivals are counted per tenant and never enter
-the scheduler.  Admission never re-queues: open-loop traffic models demand,
-not a retrying client.  Every admitted instance either completes or is
-reported in ``TrafficResult.incomplete`` with its residual task states --
-the gate may shed load, it must never silently starve.
+the scheduler.  By default admission never re-queues: open-loop traffic
+models demand, not a retrying client.  A tenant may opt into closed-loop
+behaviour with a ``RetryPolicy``: its rejected arrivals are re-submitted
+after a capped, seeded, jittered exponential backoff, up to
+``max_attempts`` admission attempts per instance.  Retried submissions are
+new admission attempts of the *same* instance (same index / workflow /
+builder seed), so per-tenant ``arrivals`` counts admission attempts while
+``retries`` counts the re-submissions among them.  Every admitted instance
+either completes or is reported in ``TrafficResult.incomplete`` with its
+residual task states -- the gate may shed load, it must never silently
+starve.
 """
 from __future__ import annotations
 
@@ -31,6 +38,38 @@ import math
 import random
 
 GiB = 1024 ** 3
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Closed-loop client behaviour for admission-rejected arrivals.
+
+    ``max_attempts`` bounds the total admission attempts per instance (the
+    original submission counts as attempt 1).  The delay before attempt
+    ``k`` (0-based retry count) is an exponential backoff
+    ``backoff * multiplier**k`` capped at ``cap``, multiplied by a seeded
+    uniform jitter in [0.5, 1.5) so retries across instances decorrelate
+    deterministically."""
+
+    max_attempts: int = 3
+    backoff: float = 30.0
+    multiplier: float = 2.0
+    cap: float = 600.0
+
+    def __post_init__(self) -> None:
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        if self.backoff <= 0 or self.multiplier < 1 or self.cap <= 0:
+            raise ValueError("backoff/multiplier/cap must be positive "
+                             "(multiplier >= 1)")
+
+    def delay(self, seed: int, attempt: int) -> float:
+        """Backoff before retry number ``attempt`` (0-based) of the
+        instance with builder seed ``seed``.  Pure: a private RNG keyed on
+        (seed, attempt), no shared stream is consumed."""
+        base = min(self.cap, self.backoff * self.multiplier ** attempt)
+        jitter = random.Random(seed * 1000003 + attempt).random()
+        return base * (0.5 + jitter)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +87,9 @@ class TenantSpec:
     workflows: tuple[str, ...] = ("chain",)
     scale: float = 0.1
     slo: float | None = None
+    # closed-loop client: re-submit admission-rejected arrivals after a
+    # seeded backoff (None keeps the pure open-loop semantics)
+    retry: RetryPolicy | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,6 +141,7 @@ class ArrivalSpec:
     workflow: str               # template name (repro.workloads registry)
     scale: float
     seed: int                   # per-instance builder seed
+    attempt: int = 0            # 0 = original submission, k = k-th retry
 
 
 def _pick_tenant(cfg: TrafficConfig, rng: random.Random) -> TenantSpec:
@@ -161,6 +204,7 @@ class InstanceRecord:
     first_start_t: float | None = None
     completed_t: float | None = None
     cpu_seconds: float = 0.0    # sum over tasks of (end-start)*cores
+    attempts: int = 1           # admission attempts until admitted
 
     @property
     def latency(self) -> float | None:
@@ -174,4 +218,4 @@ class InstanceRecord:
                 "n_tasks": self.n_tasks,
                 "first_start_t": self.first_start_t,
                 "completed_t": self.completed_t, "latency": self.latency,
-                "cpu_seconds": self.cpu_seconds}
+                "cpu_seconds": self.cpu_seconds, "attempts": self.attempts}

@@ -470,10 +470,14 @@ def test_clean_components_are_not_resolved():
 def test_flowmanager_heap_compaction_bounds_growth():
     """A long-lived flow re-rated every round leaves one stale heap entry
     per round; compaction must keep both heaps bounded by the live-flow
-    count (regression for the ROADMAP 'Heap compaction' item)."""
+    count (regression for the ROADMAP 'Heap compaction' item).  The
+    link-disjoint bystander keeps each recompute's component *partial* --
+    a component spanning every live flow takes the heap-rebuild fast path
+    instead, which leaves no garbage to compact at all."""
     caps = build_links(4, net_bw=100.0, disk_read_bw=1e6, disk_write_bw=1e6)
     fm = FlowManager(caps)
     long_flow = fm.add((("up", 0), ("down", 1)), 1e12, "long")
+    bystander = fm.add((("up", 1), ("down", 0)), 1e13, "bystander")
     fm.recompute()
     for i in range(400):
         # churn flow shares ("up", 0): every recompute re-rates the long
@@ -489,6 +493,7 @@ def test_flowmanager_heap_compaction_bounds_growth():
         assert len(fm._horizon) <= bound
     assert fm.compactions > 0
     assert long_flow.id in fm.flows             # still running, still live
+    assert bystander.id in fm.flows             # untouched component intact
     dt, nxt = fm.next_completion()
     assert nxt.id == long_flow.id               # its live entry survived
 
