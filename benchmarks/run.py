@@ -145,7 +145,7 @@ def _scenario_tables(rows: list[dict]) -> list[str]:
 
 
 def _bullets(key, val, indent: int = 0) -> list[str]:
-    """Nested-dict bullet rendering (sim_throughput/warmstart headlines)."""
+    """Nested-dict bullet rendering (sim_throughput/live_rm headlines)."""
     pad = "  " * indent
     if isinstance(val, dict):
         out = [f"{pad}- {key}:"]

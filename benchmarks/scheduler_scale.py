@@ -26,12 +26,16 @@ Two further scenarios cover this PR's other step-1 paths:
   capacity-only fast path (no DPS, no component machinery); the reference
   rebuilds every candidate list per event.  Headline keys
   ``inputless_ms_per_iter_{indexed,reference}`` / ``inputless_speedup``.
-* ``run_warmstart`` -- the declined-placement path: a synthetic resource
-  manager rejects every step-1 assignment, so tasks stay pending and (with
-  ``strict_parity=False``, benchmark-harness only -- the scheduler default
-  is unchanged) the previous assignment seeds the B&B incumbent.  Records
-  strict-vs-warm ms/event and asserts objective safety (warm never worse;
-  equal whenever the B&B stays inside its node budget).
+* ``run_live_rm`` -- the declined-placement path, end to end: bursty task
+  arrivals hit a throttled resource manager that declines every placement
+  for several scheduling rounds (the ``core/adapter.py`` decline-requeue
+  contract), then recovers and drains the backlog with out-of-order
+  completions.  Runs the full ``WowScheduler`` twice -- ``strict_parity=
+  True`` (cold) vs ``False`` (B&B incumbent seeded from the dissolved
+  assignment) -- on identical storm instances.  Records solver ms per
+  storm event, re-solve counters and warm seeds, and asserts objective
+  safety (warm never worse; equal whenever the B&B stays inside its node
+  budget).  Headline key ``live_rm``, row scenario ``live_rm``.
 * ``run_dfs_churn`` -- orig/cws/wow end-to-end on Ceph rep=2 with an
   injected node failure, recording the failure-aware DFS counters
   (degraded-read + re-replication bytes per strategy; headline key
@@ -77,9 +81,8 @@ import time
 
 import repro.core.reference as _reference
 from repro.core import (HAVE_NUMPY, DataPlacementService, FileSpec,
-                        IncrementalAssignmentSolver, NodeState,
-                        ReferenceWowScheduler, TaskSpec, WowScheduler)
-from repro.core.ilp import AssignmentProblem, objective
+                        NodeState, ReferenceWowScheduler, StartTask,
+                        TaskSpec, WowScheduler)
 
 from .common import emit, write_json
 
@@ -864,62 +867,145 @@ def run_multi_tenant(sizes: list[int] | None = None,
     return rows, headline
 
 
-# ------------------------------------------------- warm-start (declined RM)
-def run_warmstart(n_nodes: int = 6, n_tasks: int = 10, iters: int = 60,
-                  seed: int = 0) -> dict:
-    """Measure the ``strict_parity=False`` B&B warm start on the
-    declined-placement path, harness-side only (the scheduler keeps strict
-    mode for reference bit-parity).
+# --------------------------------------------- live RM (declined backlogs)
+LIVE_RM_SMOKE = {"bursts": 3, "storms": 4}
 
-    Synthetic resource-manager-rejection stream: every event the caller
-    declines the solver's whole assignment (tasks stay in the candidate
-    set and are re-marked dirty, per the solve_event contract) and one
-    node's free cores drift slightly, so the component fingerprint misses
-    the cache and the B&B really re-runs -- seeded by the surviving
-    previous assignment in warm mode.  Returns ms/event for both modes
-    and the warm-seed count, and verifies the warm objective never falls
-    below the strict one (they are equal while the B&B stays inside its
-    node budget; a budget abort may let the seed win)."""
-    results: dict[str, float] = {}
-    warm_seeds = 0
+
+def _drift_node(sched: WowScheduler, node: int, cores: float) -> None:
+    """Bench-driver capacity nudge: overwrite one node's free cores the way
+    a co-tenant RM would, through the scheduler's sanctioned dirty path."""
+    state = sched.nodes[node]
+    state.free_cores = cores
+    if sched._cap_array is not None:
+        sched._cap_array.refresh_from(node, state)
+    sched._dirty_nodes.add(node)
+
+
+def _reset_cluster(sched: WowScheduler) -> None:
+    """The RM recovers between bursts: the next burst arrives on an idle
+    cluster, making burst-start state exactly identical across modes."""
+    for n, state in sched.nodes.items():
+        state.free_mem = state.mem
+        state.free_cores = state.cores
+        if sched._cap_array is not None:
+            sched._cap_array.refresh_from(n, state)
+        sched._dirty_nodes.add(n)
+
+
+def run_live_rm(n_nodes: int = 12, bursts: int = 5,
+                storms: int = 6, hot_pool: int = 8, seed: int = 0) -> dict:
+    """Measure the ``strict_parity=False`` B&B warm start on *real* bursty
+    decline backlogs, through the full scheduler + adapter boundary
+    (``core/adapter.py``) -- the regime the CWS-style runtime exists for.
+
+    Each burst submits ``2 * hot_pool`` data-bound tasks whose inputs are
+    replicated in a staircase over the first ``hot_pool`` nodes (task pair
+    ``j`` can run on nodes ``j`` and ``j+1 mod hot_pool`` -- a pipeline
+    locality pattern).  The staircase welds one ring component inside the
+    exact gate where a perfect assignment always exists (every node fits
+    its two primary tasks) but the priority-ordered B&B has to *search*
+    for one -- while the warm run's incumbent, rebuilt from the dissolved
+    previous assignment, already attains the all-assigned upper bound and
+    closes the search immediately.  That asymmetry is exactly what
+    incumbent seeding buys on a decline-heavy runtime.  A
+    throttled RM then declines *every* placement for ``storms`` scheduling
+    rounds -- each decline reverts the reservation and requeues the task
+    per the decline contract, and one node's free cores drift per round so
+    the component fingerprint misses the cache and the B&B really re-runs.
+    After the storm the RM recovers: placements are acked and completed
+    out-of-order until the backlog drains, then the cluster idles before
+    the next burst.
+
+    ``c_node=0`` keeps COPs (and thus DPS randomness) out of the loop, so
+    the storm-round instances are identical between the strict and warm
+    runs and their objectives are directly comparable.  Reported:
+    solver ms per storm event for both modes, re-solve counters, the
+    warm-seed count, and ``objective_safe`` (warm never worse; equal
+    whenever the B&B stays inside its node budget)."""
+    results: dict = {}
     objectives: dict[str, list[float]] = {}
-    for mode, strict in (("strict", True), ("warm", False)):
+    storm_events = bursts * storms
+    burst = 2 * hot_pool
+    for mode, strict in (("cold", True), ("warm", False)):
         rng = random.Random(seed)
         nodes = {i: NodeState(i, 128 * GiB, 16.0) for i in range(n_nodes)}
-        solver = IncrementalAssignmentSolver(nodes, strict_parity=strict)
-        tasks: dict[int, TaskSpec] = {}
-        cands: dict[int, list[int]] = {}
-        seq: dict[int, int] = {}
-        for t in range(n_tasks):
-            tasks[t] = TaskSpec(id=t, abstract="a", mem=TASK_MEM,
-                                cores=TASK_CORES, inputs=(t,),
-                                priority=rng.uniform(1, 10))
-            cands[t] = sorted(rng.sample(range(n_nodes), 2))
-            seq[t] = t
-        dirty = set(tasks)
+        dps = DataPlacementService(seed=seed)
+        sched = WowScheduler(nodes, dps, c_node=0, strict_parity=strict)
+        specs: dict[int, TaskSpec] = {}
         objs: list[float] = []
-        t0 = time.perf_counter()
-        for i in range(iters):
-            drift = i % n_nodes
-            nodes[drift].free_cores = 16.0 - 1e-9 * (i + 1)
-            assign = solver.solve_event(tasks, cands, seq, dirty, {drift})
-            objs.append(objective(
-                AssignmentProblem(list(tasks.values()), cands, nodes),
-                assign))
-            # the RM rejects everything: re-mark the declined tasks dirty
-            dirty = set(assign)
-        results[f"{mode}_ms_per_event"] = (
-            (time.perf_counter() - t0) * 1000 / iters)
+        declines = 0
+        backlog_max = 0
+        solver_s = 0.0
+        sched_s = 0.0
+        next_tid = 0
+        for b in range(bursts):
+            for j in range(burst):
+                tid = next_tid
+                next_tid += 1
+                f = FileSpec(id=tid, size=1 << 20, producer=-1)
+                locs = sorted({j // 2, (j // 2 + 1) % hot_pool})
+                dps.register_file(f, locs[0])
+                for n in locs[1:]:
+                    dps.add_replica(f.id, n)
+                t = TaskSpec(id=tid, abstract="burst", mem=TASK_MEM,
+                             cores=TASK_CORES, inputs=(tid,),
+                             priority=rng.uniform(1, 10))
+                specs[tid] = t
+                sched.submit(t)
+            for s_i in range(storms):
+                ev = b * storms + s_i
+                _drift_node(sched, ev % hot_pool, 16.0 - 1e-9 * (ev + 1))
+                s0 = sched.solver_stats["solve_s"]
+                t0 = time.perf_counter()
+                actions = sched.schedule()
+                sched_s += time.perf_counter() - t0
+                solver_s += sched.solver_stats["solve_s"] - s0
+                starts = [a for a in actions if isinstance(a, StartTask)]
+                objs.append(sum(specs[a.task_id].priority for a in starts))
+                backlog_max = max(backlog_max,
+                                  len(starts) + len(sched.ready))
+                # the throttled RM nacks everything: decline-requeue path
+                for a in starts:
+                    sched.decline(a.task_id, a.node, "rm_throttled")
+                    declines += 1
+            # RM recovers: ack placements, complete out-of-order, drain
+            stalls = 0
+            while sched.ready:
+                starts = [a for a in sched.schedule()
+                          if isinstance(a, StartTask)]
+                if not starts:
+                    stalls += 1
+                    assert stalls < 3, "live_rm drain stalled"
+                    continue
+                for a in starts:
+                    sched.task_started(a.task_id, a.node)
+                for a in reversed(starts):
+                    sched.task_finished(a.task_id, a.node)
+            _reset_cluster(sched)
+        stats = sched.solver_stats
+        results[f"{mode}_solver_ms_per_event"] = (
+            solver_s * 1000 / storm_events)
+        results[f"{mode}_sched_ms_per_event"] = (
+            sched_s * 1000 / storm_events)
+        results[f"{mode}_resolves"] = {
+            k: int(stats[k]) for k in ("events", "comps_rebuilt",
+                                       "exact_solves", "cache_hits",
+                                       "cache_misses")}
         objectives[mode] = objs
         if not strict:
-            warm_seeds = int(solver.stats["warm_seeds"])
+            results["warm_seeds"] = int(stats["warm_seeds"])
+            results["declines"] = declines
+            results["backlog_max"] = backlog_max
     # objective safety: seeding may only match or improve the objective
     # (it matches exactly whenever the B&B stays inside its node budget)
-    assert all(w >= s - 1e-9 for s, w in zip(objectives["strict"],
+    assert all(w >= c - 1e-9 for c, w in zip(objectives["cold"],
                                              objectives["warm"])), (
         "warm start regressed the step-1 objective")
-    results["warm_seeds"] = warm_seeds
     results["objective_safe"] = True
+    results["storm_events"] = storm_events
+    results["warm_vs_cold"] = (
+        results["warm_solver_ms_per_event"]
+        / max(results["cold_solver_ms_per_event"], 1e-9))
     return results
 
 
@@ -1046,13 +1132,14 @@ def main() -> list[dict]:
     topo_rows, topo_head = run_topology()
     rows.extend(topo_rows)
 
-    # warm start on the declined-placement path (harness-only)
-    warm = run_warmstart()
-    rows.append({"impl": "incremental-solver", "scenario": "warmstart_declined",
-                 **{k: v for k, v in warm.items()}})
-    emit(f"scheduler_scale,warmstart_declined,strict_ms,"
-         f"{warm['strict_ms_per_event']:.3f},warm_ms,"
-         f"{warm['warm_ms_per_event']:.3f},warm_seeds,{warm['warm_seeds']}")
+    # warm start on real bursty decline backlogs (full scheduler + adapter)
+    live = run_live_rm(**(LIVE_RM_SMOKE if bench_smoke() else {}))
+    rows.append({"impl": "wow-scheduler", "scenario": "live_rm",
+                 **{k: v for k, v in live.items()}})
+    emit(f"scheduler_scale,live_rm,cold_ms,"
+         f"{live['cold_solver_ms_per_event']:.3f},warm_ms,"
+         f"{live['warm_solver_ms_per_event']:.3f},warm_seeds,"
+         f"{live['warm_seeds']},declines,{live['declines']}")
 
     # node churn on Ceph rep=2: degraded reads + re-replication traffic
     churn = run_dfs_churn()
@@ -1086,7 +1173,7 @@ def main() -> list[dict]:
                      "e2e_vectorized": e2e_head,
                      "multi_tenant": mt_head,
                      "topology": topo_head,
-                     "warmstart": warm,
+                     "live_rm": live,
                      "dfs_churn": churn,
                      "solver_stats": headline_stats},
     })

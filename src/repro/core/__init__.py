@@ -3,6 +3,8 @@
 Environment-free -- the discrete-event simulator (`repro.sim`) and the JAX
 runtime adapter (`repro.runtime`) both drive these classes.
 """
+from .adapter import (ADAPTER_API, CwsAdapter, OrigAdapter, RuntimeAdapter,
+                      WowAdapter, assert_implements, make_adapter)
 from .dps import DataPlacementService
 from .ilp import (AssignmentProblem, FingerprintCache,
                   IncrementalAssignmentSolver, component_fingerprint,
@@ -17,13 +19,15 @@ from .types import (Action, CopPlan, DFS_LOC, FileSpec, NodeState, StartCop,
                     StartTask, TaskSpec, Transfer)
 
 __all__ = [
-    "Action", "ArrayCapacityClasses", "AssignmentProblem", "CapacityClasses",
-    "CopPlan", "DFS_LOC", "DataPlacementService", "FileSpec",
+    "ADAPTER_API", "Action", "ArrayCapacityClasses", "AssignmentProblem",
+    "CapacityClasses",
+    "CopPlan", "CwsAdapter", "DFS_LOC", "DataPlacementService", "FileSpec",
     "FingerprintCache", "HAVE_NUMPY", "IncrementalAssignmentSolver",
-    "NodeCapacityArray", "NodeOrder", "NodeState", "ReadySet",
-    "ReferenceWowScheduler", "ShapeIndex", "StartCop", "StartTask",
-    "TaskSpec", "Transfer", "WowScheduler", "abstract_ranks",
-    "assign_priorities", "component_fingerprint", "decompose",
+    "NodeCapacityArray", "NodeOrder", "NodeState", "OrigAdapter", "ReadySet",
+    "ReferenceWowScheduler", "RuntimeAdapter", "ShapeIndex", "StartCop",
+    "StartTask", "TaskSpec", "Transfer", "WowAdapter", "WowScheduler",
+    "abstract_ranks", "assert_implements", "assign_priorities",
+    "component_fingerprint", "decompose", "make_adapter",
     "priority_value", "solve", "solve_exact", "solve_greedy",
     "solve_monolithic",
 ]

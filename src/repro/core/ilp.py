@@ -160,7 +160,14 @@ def solve_exact(problem: AssignmentProblem,
         # bit-identically.
         best_assign = {tid: n for tid, n in incumbent.items()
                        if n in p.prepared.get(tid, ())}
-        best_val = sum(t.priority for t in tasks if t.id in best_assign)
+        # accumulate in the same (reversed-task) order as the suffix bound:
+        # a fully surviving incumbent then equals suffix[0] bit-exactly, so
+        # the root prune closes the search immediately instead of losing to
+        # float non-associativity by one ulp and re-searching everything
+        best_val = 0.0
+        for i in range(len(tasks) - 1, -1, -1):
+            if tasks[i].id in best_assign:
+                best_val = best_val + tasks[i].priority
     cur_assign: dict[int, int] = {}
     visited = 0
     aborted = False

@@ -99,11 +99,16 @@ class WowScheduler:
         c_task: int = 2,
         node_order: NodeOrder | None = None,
         vectorized: bool | None = None,
+        strict_parity: bool = True,
     ) -> None:
         self.nodes = nodes
         self.dps = dps
         self.c_node = c_node
         self.c_task = c_task
+        # strict_parity=False lets the step-1 solver seed its B&B incumbent
+        # from surviving previous assignments -- pays off exactly when a
+        # runtime declines placements (core/adapter.py decline-requeue path)
+        self.strict_parity = bool(strict_parity)
         # vectorized hot node state (DESIGN.md "Vectorized hot state"):
         # None = auto (on exactly when numpy is importable).  The dict path
         # is the retained, equivalence-tested oracle; decisions are
@@ -128,6 +133,7 @@ class WowScheduler:
         # metrics hooks
         self.cops_created: int = 0
         self.tasks_started: int = 0
+        self.declines: int = 0
         # per-phase wall time (benchmarks): step 1 overall, its input-less
         # share, and steps 2-3 together
         self.phase_s: dict[str, float] = {
@@ -162,7 +168,8 @@ class WowScheduler:
         self.dps.sync_free_sources(self._free_slot_nodes)
         # step-1 solver state lives for the scheduler's lifetime; dirty
         # components are re-solved per event, the rest are reused
-        self._solver = IncrementalAssignmentSolver(nodes, cap=self._cap_array)
+        self._solver = IncrementalAssignmentSolver(
+            nodes, strict_parity=self.strict_parity, cap=self._cap_array)
 
     # ------------------------------------------------------------- events
     def submit(self, task: TaskSpec) -> None:
@@ -181,6 +188,8 @@ class WowScheduler:
             self._less_stale = True
 
     def on_task_finished(self, task_id: int, node: int) -> None:
+        if not self._known(task_id):
+            return                    # unknown/duplicate id: explicit no-op
         self.running.pop(task_id, None)
         t_node = self.nodes[node]
         t_node.free_mem += self._mem_of(task_id)
@@ -191,6 +200,8 @@ class WowScheduler:
             self._cap_array.refresh_from(node, t_node)
 
     def on_cop_finished(self, plan: CopPlan, ok: bool = True) -> None:
+        if plan.id not in self.active_cops:
+            return                    # unknown/duplicate plan: explicit no-op
         self.active_cops.pop(plan.id, None)
         cops = max(0, self.cops_per_task.get(plan.task_id, 0) - 1)
         self.cops_per_task[plan.task_id] = cops
@@ -205,6 +216,63 @@ class WowScheduler:
         self.inflight_targets.discard((plan.task_id, plan.target))
         if ok:
             self.dps.commit_cop(plan)   # marks consumer tasks dirty in DPS
+
+    def decline(self, task_id: int, node: int, reason: str = "") -> None:
+        """Runtime declined an outstanding placement: revert the reservation
+        exactly and requeue the task as a fresh submission (core/adapter.py
+        decline-requeue contract).  The node is re-marked dirty and the task
+        re-enters the dirty sets via :meth:`submit`, so the next
+        ``schedule()`` considers it anew -- with ``strict_parity=False`` the
+        step-1 solver additionally seeds its B&B incumbent from the
+        just-dissolved assignment.  Unknown or mismatched (task, node) pairs
+        are explicit no-ops."""
+        if self.running.get(task_id) != node:
+            return
+        del self.running[task_id]
+        t = self._finished_specs.pop(task_id)
+        state = self.nodes[node]
+        state.free_mem += t.mem
+        state.free_cores += t.cores
+        if self._cap_array is not None:
+            self._cap_array.refresh_from(node, state)
+        self._dirty_nodes.add(node)
+        self.declines += 1
+        self.submit(t)
+
+    def forget_task(self, task_id: int) -> None:
+        """Instance retirement: drop retained per-task bookkeeping for a
+        *completed* task (COP budget counter, any stale submit seq).  Live
+        ids -- still queued or running -- and never-seen ids are explicit
+        no-ops, per the adapter's unknown-id contract."""
+        if task_id in self.ready or task_id in self.running:
+            return
+        self.cops_per_task.pop(task_id, None)
+        self._submit_seq.pop(task_id, None)
+
+    def _known(self, task_id: int) -> bool:
+        """Shared unknown-id guard (core/adapter.py): an id is known iff it
+        names a currently running (outstanding-or-started) placement."""
+        return task_id in self.running
+
+    # CWS-style adapter surface (core/adapter.py): canonical names for the
+    # pre-adapter event methods, so WowScheduler itself satisfies the
+    # runtime adapter API and a mock RM can drive it standalone.
+    def task_started(self, task_id: int, node: int) -> None:  # noqa: ARG002
+        """Runtime ack of a placement; resources were reserved at
+        ``schedule()`` time, so this is a pure acknowledgement."""
+        pass
+
+    def task_finished(self, task_id: int, node: int) -> None:
+        self.on_task_finished(task_id, node)
+
+    def cop_finished(self, plan: CopPlan, ok: bool = True) -> None:
+        self.on_cop_finished(plan, ok)
+
+    def node_added(self, node: int) -> None:
+        self.note_node_added(node)
+
+    def node_removed(self, node: int) -> None:
+        self.note_node_removed(node)
 
     def note_node_added(self, node: int) -> None:
         self.node_order.add(node)       # no-op when the environment owns it

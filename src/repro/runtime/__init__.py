@@ -6,3 +6,13 @@ __all__ = ["CheckpointManager", "ReplicaPlacer", "TrainConfig", "Trainer",
 from .serving import Completion, Request, ServingEngine  # noqa: E402
 
 __all__ += ["Completion", "Request", "ServingEngine"]
+
+# CWS-style live runtime (stdlib-only; see core/adapter.py for the boundary)
+from .k8s_dryrun import (K8sDryRun, cop_job_manifest,  # noqa: E402
+                         pod_manifest)
+from .mockrm import (DeclinePolicy, MockRMConfig,  # noqa: E402
+                     MockResourceManager, RMReport, run_mock_rm)
+
+__all__ += ["DeclinePolicy", "K8sDryRun", "MockRMConfig",
+            "MockResourceManager", "RMReport", "cop_job_manifest",
+            "pod_manifest", "run_mock_rm"]

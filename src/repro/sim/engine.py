@@ -265,10 +265,13 @@ class Simulation:
                 self._submit(t)
 
     def _iterate(self) -> None:
-        for act in self.strategy.iterate():
+        for act in self.strategy.schedule():
             if isinstance(act, StartTask):
                 self.action_log.append((self.time, "task", act.task_id,
                                         act.node))
+                # the sim never declines: ack immediately (no-op by the
+                # adapter contract -- resources were reserved at schedule())
+                self.strategy.task_started(act.task_id, act.node)
                 self._start_task(act.task_id, act.node)
             elif isinstance(act, StartCop):
                 self.action_log.append((self.time, "cop", act.plan.task_id,
@@ -383,7 +386,7 @@ class Simulation:
                                    + (self.time - run.start) * task.cores)
         if self.traffic is not None:
             self._traffic_task_done(tid, run.start, self.time, task.cores)
-        self.strategy.on_task_finished(tid, node)
+        self.strategy.task_finished(tid, node)
         if isinstance(self.strategy, WowStrategy):
             for f in task.outputs:
                 self.strategy.dps.register_file(self.wf.files[f], node)
@@ -424,7 +427,7 @@ class Simulation:
         cop = self.cop_runs.pop(cop_id)
         if ok:
             self.completed_cops[cop_id] = (cop.plan, self.time)
-        self.strategy.on_cop_finished(cop.plan, ok)
+        self.strategy.cop_finished(cop.plan, ok)
 
     # ----------------------------------------------------- failure/elastic
     def _fail_node(self, node: int) -> None:
@@ -450,7 +453,7 @@ class Simulation:
                 self._drop_flow(fl)
             self.task_runs.pop(tid)
             # frees resources on the (soon-removed) node
-            self.strategy.on_task_finished(tid, node)
+            self.strategy.task_finished(tid, node)
             self._resubmit(self.wf.tasks[tid])
         # abort COPs touching the node
         for cid, cop in list(self.cop_runs.items()):
@@ -458,7 +461,7 @@ class Simulation:
                 for fl in cop.flows:
                     self._drop_flow(fl)
                 self.cop_runs.pop(cid)
-                self.strategy.on_cop_finished(cop.plan, ok=False)
+                self.strategy.cop_finished(cop.plan, ok=False)
         # DFS replica lifecycle: drop dead replicas, plan repairs, cancel
         # in-flight repairs that touched the node (replacements included in
         # `repairs`), then redirect surviving tasks' I/O off the dead node
@@ -476,7 +479,7 @@ class Simulation:
             lost = self.strategy.dps.drop_node(node)
         self.nodes.pop(node, None)
         self.node_order.discard(node)
-        self.strategy.on_node_removed(node)
+        self.strategy.node_removed(node)
         for spec in repairs:
             self._launch_repair(*spec)
         for f in lost:
@@ -581,7 +584,7 @@ class Simulation:
             # a join may open a brand-new rack/site: materialise its links
             self.topo.ensure_node(node_id, self.fm.capacities)
         self.dfs.add_node(node_id)      # joins the placement universe
-        self.strategy.on_node_added(node_id)
+        self.strategy.node_added(node_id)
 
     # -------------------------------------------------- open-loop traffic
     def _sample_depth(self) -> None:

@@ -1,232 +1,34 @@
-"""The three scheduling strategies of the paper's evaluation (§V-C).
+"""Compatibility shim: the scheduling strategies now live in
+``repro.core.adapter`` as engine-agnostic runtime adapters.
 
-* ``OrigStrategy`` -- Nextflow original: FIFO task order, round-robin node
-  choice, all data exchanged through the DFS.
-* ``CwsStrategy``  -- Common Workflow Scheduler: priority (rank, input size)
-  order, resource-aware node choice, still DFS-based I/O.
-* ``WowStrategy``  -- the paper's contribution: wraps ``core.WowScheduler``
-  (+DPS); intermediate data lives on node-local storage, moved by COPs.
+The three policies of the paper's evaluation (§V-C) -- Nextflow original
+(FIFO + round-robin), the Common Workflow Scheduler baseline and the
+paper's WOW scheduler -- used to be welded to the sim engine's synchronous
+callbacks here.  They were always environment-free (they import only from
+``repro.core``), so the CWS-style adapter refactor moved them behind the
+runtime boundary in ``core/adapter.py``, where the same classes drive both
+the discrete-event simulator and the live asyncio mock resource manager
+(``runtime/mockrm.py``).  This module keeps the historical sim-facing names
+as aliases; new code should import from ``repro.core.adapter``.
 
-Node churn: all three strategies support failure injection and elastic
-join (``on_node_removed`` / ``on_node_added``).  For the DFS-bound
-baselines the engine additionally drives the failure-aware replica
-lifecycle (``sim/dfs.py``): their intermediate data survives a node loss
-via degraded reads and background re-replication, while WOW's node-local
-intermediates are recovered by re-running producers (``dps.drop_node``) --
-so churn comparisons price each design's actual recovery mechanism.
+Node churn: all three adapters support failure injection and elastic join
+(``node_removed`` / ``node_added``).  For the DFS-bound baselines the
+engine additionally drives the failure-aware replica lifecycle
+(``sim/dfs.py``): their intermediate data survives a node loss via degraded
+reads and background re-replication, while WOW's node-local intermediates
+are recovered by re-running producers (``dps.drop_node``) -- so churn
+comparisons price each design's actual recovery mechanism.
 """
 from __future__ import annotations
 
-from ..core import (DataPlacementService, NodeOrder, NodeState, StartTask,
-                    TaskSpec, WowScheduler)
-from ..core.reference import ReferenceWowScheduler
-from ..core.types import Action
+from ..core.adapter import (CwsAdapter, OrigAdapter, RuntimeAdapter,
+                            WowAdapter, make_adapter)
 
+BaseStrategy = RuntimeAdapter
+OrigStrategy = OrigAdapter
+CwsStrategy = CwsAdapter
+WowStrategy = WowAdapter
+make_strategy = make_adapter
 
-class BaseStrategy:
-    name = "base"
-    local_io = False      # True => intermediate I/O on node-local disks
-
-    def __init__(self, nodes: dict[int, NodeState]) -> None:
-        self.nodes = nodes
-        self.running: dict[int, TaskSpec] = {}
-
-    def submit(self, task: TaskSpec) -> None:
-        raise NotImplementedError
-
-    def iterate(self) -> list[Action]:
-        raise NotImplementedError
-
-    def on_task_finished(self, task_id: int, node: int) -> None:
-        t = self.running.pop(task_id)
-        self.nodes[node].free_mem += t.mem
-        self.nodes[node].free_cores += t.cores
-
-    def on_cop_finished(self, plan, ok: bool = True) -> None:  # noqa: ARG002
-        pass
-
-    def on_node_added(self, node: int) -> None:  # noqa: ARG002
-        pass
-
-    def on_node_removed(self, node: int) -> None:  # noqa: ARG002
-        pass
-
-    def forget_task(self, task_id: int) -> None:  # noqa: ARG002
-        """Instance retirement (open-loop traffic): drop any retained spec
-        for a completed task so service-mode memory stays bounded."""
-        pass
-
-    def churn_probe(self) -> dict:
-        """Cheap snapshot of scheduler-internal churn counters, sampled by
-        the engine after each traffic arrival (dirty-set / solver-activity
-        profiling).  DFS-bound baselines have no incremental core: empty."""
-        return {}
-
-    def _reserve(self, t: TaskSpec, node: int) -> None:
-        self.nodes[node].free_mem -= t.mem
-        self.nodes[node].free_cores -= t.cores
-        self.running[t.id] = t
-
-
-class OrigStrategy(BaseStrategy):
-    """FIFO + RoundRobin, data via DFS."""
-
-    name = "orig"
-
-    def __init__(self, nodes: dict[int, NodeState]) -> None:
-        super().__init__(nodes)
-        self.queue: list[TaskSpec] = []
-        self._rr = 0
-        self._node_ids = sorted(nodes)
-
-    def on_node_added(self, node: int) -> None:
-        if node not in self._node_ids:
-            self._node_ids.append(node)   # joins the round-robin ring last
-
-    def on_node_removed(self, node: int) -> None:
-        if node in self._node_ids:
-            idx = self._node_ids.index(node)
-            self._node_ids.pop(idx)
-            # keep the round-robin pointer on the same successor node
-            if idx < self._rr:
-                self._rr -= 1
-            if self._node_ids:
-                self._rr %= len(self._node_ids)
-            else:
-                self._rr = 0
-
-    def submit(self, task: TaskSpec) -> None:
-        self.queue.append(task)
-
-    def iterate(self) -> list[Action]:
-        actions: list[Action] = []
-        # strict FIFO: head-of-line blocks when no node fits it
-        while self.queue:
-            t = self.queue[0]
-            placed = False
-            for i in range(len(self._node_ids)):
-                n = self._node_ids[(self._rr + i) % len(self._node_ids)]
-                if self.nodes[n].fits(t):
-                    self._rr = (self._rr + i + 1) % len(self._node_ids)
-                    self.queue.pop(0)
-                    self._reserve(t, n)
-                    actions.append(StartTask(t.id, n))
-                    placed = True
-                    break
-            if not placed:
-                break
-        return actions
-
-
-class CwsStrategy(BaseStrategy):
-    """Priority (rank, input size) order, most-free-cores node; DFS I/O."""
-
-    name = "cws"
-
-    def __init__(self, nodes: dict[int, NodeState]) -> None:
-        super().__init__(nodes)
-        self.queue: dict[int, TaskSpec] = {}
-
-    def submit(self, task: TaskSpec) -> None:
-        self.queue[task.id] = task
-
-    def iterate(self) -> list[Action]:
-        actions: list[Action] = []
-        for t in sorted(self.queue.values(), key=lambda t: (-t.priority, t.id)):
-            cands = [n for n, s in self.nodes.items() if s.fits(t)]
-            if not cands:
-                continue
-            n = max(cands, key=lambda n: (self.nodes[n].free_cores,
-                                          self.nodes[n].free_mem, -n))
-            del self.queue[t.id]
-            self._reserve(t, n)
-            actions.append(StartTask(t.id, n))
-        return actions
-
-
-class WowStrategy(BaseStrategy):
-    """The paper's three-step scheduler + DPS; local intermediate I/O."""
-
-    name = "wow"
-    local_io = True
-
-    def __init__(self, nodes: dict[int, NodeState], c_node: int = 1,
-                 c_task: int = 2, seed: int = 0,
-                 reference_core: bool = False,
-                 node_order: NodeOrder | None = None,
-                 vectorized: bool | None = None,
-                 topology=None) -> None:
-        super().__init__(nodes)
-        if node_order is None:
-            node_order = NodeOrder(nodes)
-        self.dps = DataPlacementService(seed=seed, node_order=node_order)
-        if topology is not None:
-            # locality-aware COP sources + weighted cost model; a flat
-            # topology detaches inside set_topology (bit-identical runs)
-            self.dps.set_topology(topology)
-        if reference_core:
-            # the frozen reference has no vectorized path by design
-            self.sched = ReferenceWowScheduler(
-                nodes, self.dps, c_node=c_node, c_task=c_task,
-                node_order=node_order)
-        else:
-            self.sched = WowScheduler(
-                nodes, self.dps, c_node=c_node, c_task=c_task,
-                node_order=node_order, vectorized=vectorized)
-        self._specs: dict[int, TaskSpec] = {}
-
-    def submit(self, task: TaskSpec) -> None:
-        self._specs[task.id] = task
-        self.sched.submit(task)
-
-    def iterate(self) -> list[Action]:
-        return self.sched.schedule()
-
-    def on_task_finished(self, task_id: int, node: int) -> None:
-        # resource bookkeeping lives inside WowScheduler
-        self.sched.on_task_finished(task_id, node)
-
-    def on_cop_finished(self, plan, ok: bool = True) -> None:
-        self.sched.on_cop_finished(plan, ok)
-
-    def on_node_added(self, node: int) -> None:
-        self.sched.note_node_added(node)
-
-    def on_node_removed(self, node: int) -> None:
-        self.sched.note_node_removed(node)
-
-    def forget_task(self, task_id: int) -> None:
-        self._specs.pop(task_id, None)
-
-    def churn_probe(self) -> dict:
-        """Dirty-set sizes + cumulative solver event counter.  The
-        reference core keeps no dirty sets or solver stats
-        (getattr-guarded).  Counters only -- no wall-clock timings, so the
-        probe is replay-deterministic (bit-identical TrafficResults)."""
-        probe = {
-            "dirty_tasks": (
-                len(getattr(self.sched, "_dirty_tasks", ()))
-                + len(self.dps._dirty_tasks)),
-        }
-        stats = getattr(self.sched, "solver_stats", None)
-        if stats:
-            probe["solver_events"] = stats.get("events", 0)
-        return probe
-
-
-def make_strategy(name: str, nodes: dict[int, NodeState], *, c_node: int = 1,
-                  c_task: int = 2, seed: int = 0,
-                  reference_core: bool = False,
-                  node_order: NodeOrder | None = None,
-                  vectorized: bool | None = None,
-                  topology=None) -> BaseStrategy:
-    if name == "orig":
-        return OrigStrategy(nodes)
-    if name == "cws":
-        return CwsStrategy(nodes)
-    if name == "wow":
-        return WowStrategy(nodes, c_node=c_node, c_task=c_task, seed=seed,
-                           reference_core=reference_core,
-                           node_order=node_order, vectorized=vectorized,
-                           topology=topology)
-    raise ValueError(f"unknown strategy {name!r}")
+__all__ = ["BaseStrategy", "CwsStrategy", "OrigStrategy", "WowStrategy",
+           "make_strategy"]

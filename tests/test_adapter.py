@@ -1,0 +1,240 @@
+"""Runtime adapter boundary (core/adapter.py): protocol conformance,
+decline-requeue semantics, the shared unknown-id guard, and the
+property test streaming randomized submit/decline/complete sequences
+against a freshly built scheduler oracle (bit-identity where
+``strict_parity=True``)."""
+import random
+
+import pytest
+
+from repro.core import (ADAPTER_API, CwsAdapter, DataPlacementService,
+                        FileSpec, NodeState, OrigAdapter, StartTask,
+                        TaskSpec, WowAdapter, WowScheduler,
+                        assert_implements, make_adapter)
+
+from _hyp import given, settings, st
+
+GiB = 1 << 30
+
+
+def _nodes(n=4, mem=16 * GiB, cores=8.0):
+    return {i: NodeState(i, mem, cores) for i in range(n)}
+
+
+def _task(tid, mem=2 * GiB, cores=2.0, inputs=(), priority=1.0):
+    return TaskSpec(id=tid, abstract=f"t{tid}", mem=mem, cores=cores,
+                    inputs=tuple(inputs), priority=priority)
+
+
+def _free(nodes):
+    return {n: (s.free_mem, s.free_cores) for n, s in nodes.items()}
+
+
+# ------------------------------------------------------------- conformance
+def test_adapters_implement_protocol():
+    nodes = _nodes()
+    for name in ("orig", "cws", "wow"):
+        assert_implements(make_adapter(name, nodes))
+    # the wow core itself satisfies the API (mock RM drives it standalone)
+    assert_implements(WowScheduler(_nodes(), DataPlacementService(seed=0)))
+
+
+def test_assert_implements_rejects_partial():
+    class Half:
+        def submit(self, task):
+            pass
+
+    with pytest.raises(TypeError, match="decline"):
+        assert_implements(Half())
+    assert "decline" in ADAPTER_API and "task_started" in ADAPTER_API
+
+
+def test_legacy_names_forward():
+    nodes = _nodes()
+    ad = make_adapter("orig", nodes)
+    ad.submit(_task(0))
+    acts = ad.iterate()               # legacy alias for schedule()
+    assert [a.task_id for a in acts] == [0]
+    ad.on_task_finished(0, acts[0].node)   # legacy alias
+    assert _free(nodes) == _free(_nodes())
+
+
+# ------------------------------------------------------- unknown-id guard
+@pytest.mark.parametrize("name", ["orig", "cws", "wow"])
+def test_unknown_ids_are_noops(name):
+    nodes = _nodes()
+    ad = make_adapter(name, nodes, c_node=0)
+    before = _free(nodes)
+    ad.task_finished(99, 0)
+    ad.decline(99, 0, "never seen")
+    ad.forget_task(99)
+    assert _free(nodes) == before
+    assert ad.declines == 0
+    # known-id sanity: a real placement still releases on finish
+    ad.submit(_task(1))
+    (act,) = [a for a in ad.schedule() if isinstance(a, StartTask)]
+    assert not ad._known(99) and ad._known(1)
+    ad.task_finished(1, act.node)
+    ad.task_finished(1, act.node)     # duplicate completion: no-op
+    assert _free(nodes) == before
+
+
+def test_wow_unknown_cop_plan_is_noop():
+    sched = WowScheduler(_nodes(), DataPlacementService(seed=0), c_node=0)
+    from repro.core import CopPlan
+    ghost = CopPlan(id=123, task_id=7, target=0, transfers=[], price=0.0)
+    before = _free(sched.nodes)
+    sched.cop_finished(ghost, ok=True)     # never started: explicit no-op
+    assert _free(sched.nodes) == before
+    assert sched.cops_per_task.get(7, 0) == 0
+
+
+def test_wow_decline_mismatched_node_is_noop():
+    nodes = _nodes()
+    dps = DataPlacementService(seed=0)
+    sched = WowScheduler(nodes, dps, c_node=0)
+    sched.submit(_task(0))
+    (act,) = sched.schedule()
+    wrong = (act.node + 1) % len(nodes)
+    before = _free(nodes)
+    sched.decline(0, wrong, "wrong node")
+    assert _free(nodes) == before and 0 in sched.running
+    sched.decline(0, act.node, "right node")
+    assert 0 in sched.ready and 0 not in sched.running
+    assert sched.declines == 1
+
+
+# --------------------------------------------------------- decline-requeue
+@pytest.mark.parametrize("name", ["orig", "cws", "wow"])
+def test_decline_reverts_and_requeues(name):
+    nodes = _nodes()
+    ad = make_adapter(name, nodes, c_node=0)
+    idle = _free(nodes)
+    for tid in range(3):
+        ad.submit(_task(tid, priority=float(tid)))
+    starts = [a for a in ad.schedule() if isinstance(a, StartTask)]
+    assert len(starts) == 3
+    for a in starts:
+        ad.decline(a.task_id, a.node, "rm_throttled")
+    # reservation reverted exactly; everything queued again
+    assert _free(nodes) == idle
+    assert ad.declines == 3
+    again = [a for a in ad.schedule() if isinstance(a, StartTask)]
+    assert sorted(a.task_id for a in again) == [0, 1, 2]
+    for a in again:
+        ad.task_finished(a.task_id, a.node)
+    assert _free(nodes) == idle
+
+
+def test_wow_decline_retracks_dps():
+    """A declined data-bound task is a fresh submission: DPS-tracked again,
+    and its next placement equals a fresh scheduler's decision."""
+    nodes = _nodes()
+    dps = DataPlacementService(seed=0)
+    sched = WowScheduler(nodes, dps, c_node=0)
+    f = FileSpec(id=0, size=1 << 20, producer=-1)
+    dps.register_file(f, 2)
+    t = _task(0, inputs=(0,))
+    sched.submit(t)
+    (act,) = sched.schedule()
+    assert act.node == 2 and not dps.tracked(0)
+    sched.decline(0, 2, "busy")
+    assert dps.tracked(0) and 0 in sched.ready
+    (act2,) = sched.schedule()
+    assert (act2.task_id, act2.node) == (0, 2)
+
+
+# ------------------------------------------------- property: fresh oracle
+def _build_wow(free_state, reg_log, queued, specs, seed):
+    nodes = {n: NodeState(n, 16 * GiB, 8.0, free_mem=fm, free_cores=fc)
+             for n, (fm, fc) in free_state.items()}
+    dps = DataPlacementService(seed=seed)
+    for f, locs in reg_log:
+        dps.register_file(f, locs[0])
+        for n in locs[1:]:
+            dps.add_replica(f.id, n)
+    sched = WowScheduler(nodes, dps, c_node=0)
+    for tid in queued:
+        sched.submit(specs[tid])
+    return sched
+
+
+@settings(max_examples=12)
+@given(st.integers(0, 10_000), st.sampled_from(["orig", "cws", "wow"]))
+def test_decline_stream_matches_fresh_schedule(seed, name):
+    """Randomized submit/decline/complete streams: after any prefix, the
+    incumbent adapter's next schedule() must equal the decision of a
+    scheduler built fresh from the visible state (queue in submission
+    order, node free state, file replicas).  This is the decline-requeue
+    contract: a declined task is indistinguishable from a fresh
+    submission."""
+    rng = random.Random(seed)
+    nodes = _nodes()
+    ad = make_adapter(name, nodes, c_node=0, seed=7)
+    specs: dict[int, TaskSpec] = {}
+    reg_log: list[tuple[FileSpec, list[int]]] = []
+    queued: list[int] = []            # current queue, submission order
+    running: dict[int, int] = {}      # tid -> node
+    next_tid = 0
+
+    def check_and_apply():
+        nonlocal queued
+        if name == "wow":
+            oracle = _build_wow(_free(nodes), reg_log, queued, specs, seed=7)
+        else:
+            onodes = {n: NodeState(n, 16 * GiB, 8.0, free_mem=fm,
+                                   free_cores=fc)
+                      for n, (fm, fc) in _free(nodes).items()}
+            oracle = make_adapter(name, onodes)
+            if name == "orig":
+                # the round-robin pointer is documented scheduler state
+                oracle._rr = ad._rr
+            for tid in queued:
+                oracle.submit(specs[tid])
+        expect = [(a.task_id, a.node) for a in oracle.schedule()]
+        starts = [a for a in ad.schedule() if isinstance(a, StartTask)]
+        assert [(a.task_id, a.node) for a in starts] == expect
+        for a in starts:
+            queued.remove(a.task_id)
+            ad.task_started(a.task_id, a.node)
+            if rng.random() < 0.4:
+                ad.decline(a.task_id, a.node, "rm_throttled")
+                queued.append(a.task_id)       # fresh submission: tail
+            else:
+                running[a.task_id] = a.node
+
+    for _ in range(14):
+        op = rng.random()
+        if op < 0.45:
+            tid = next_tid
+            next_tid += 1
+            inputs = ()
+            if name == "wow" and rng.random() < 0.7:
+                f = FileSpec(id=tid, size=1 << 20, producer=-1)
+                locs = sorted(rng.sample(range(len(nodes)),
+                                         rng.randint(1, 3)))
+                ad.dps.register_file(f, locs[0])
+                for n in locs[1:]:
+                    ad.dps.add_replica(f.id, n)
+                reg_log.append((f, locs))
+                inputs = (tid,)
+            specs[tid] = _task(tid, mem=rng.randint(1, 4) * GiB,
+                               cores=float(rng.randint(1, 4)),
+                               inputs=inputs,
+                               priority=round(rng.uniform(1, 10), 3))
+            ad.submit(specs[tid])
+            queued.append(tid)
+        elif op < 0.75:
+            check_and_apply()
+        elif running:
+            # out-of-order completion: any running task may finish first
+            tid = rng.choice(sorted(running))
+            ad.task_finished(tid, running.pop(tid))
+    check_and_apply()
+    # conservation: free + running reservations == totals
+    for n, s in nodes.items():
+        used_mem = sum(specs[t].mem for t, rn in running.items() if rn == n)
+        used_cores = sum(specs[t].cores
+                         for t, rn in running.items() if rn == n)
+        assert s.free_mem + used_mem == s.mem
+        assert abs(s.free_cores + used_cores - s.cores) < 1e-9

@@ -539,11 +539,11 @@ def test_scheduler_scale_reports_solver_phase():
             assert sus["stats"] is None
 
 
-def test_scheduler_scale_inputless_and_warmstart_rows():
+def test_scheduler_scale_inputless_and_live_rm_rows():
     """The fan-out (input-less) scenario must run both implementations to
-    identical decisions at small scale, and the declined-placement
-    warm-start micro-benchmark must report its keys."""
-    from benchmarks.scheduler_scale import (run_inputless, run_warmstart,
+    identical decisions at small scale, and the declined-placement live-RM
+    scenario must report its keys with objective safety and warm seeds."""
+    from benchmarks.scheduler_scale import (run_inputless, run_live_rm,
                                             sanity_check_equivalence)
     from repro.core import ReferenceWowScheduler, WowScheduler
     sanity_check_equivalence(n_nodes=6, n_ready=24, sustained_iters=6,
@@ -551,8 +551,12 @@ def test_scheduler_scale_inputless_and_warmstart_rows():
     for cls in (WowScheduler, ReferenceWowScheduler):
         sus = run_inputless(4, 8, cls, iters=2)
         assert sus["ms"] >= 0.0
-    warm = run_warmstart(iters=8)
-    assert warm["objective_safe"]
-    assert warm["warm_seeds"] > 0
-    assert warm["strict_ms_per_event"] > 0.0
-    assert warm["warm_ms_per_event"] > 0.0
+    live = run_live_rm(bursts=2, storms=3)
+    assert live["objective_safe"]
+    assert live["warm_seeds"] > 0
+    assert live["declines"] == 2 * 3 * 16
+    assert live["storm_events"] == 6
+    assert live["cold_solver_ms_per_event"] > 0.0
+    assert live["warm_solver_ms_per_event"] > 0.0
+    for mode in ("cold", "warm"):
+        assert live[f"{mode}_resolves"]["exact_solves"] > 0

@@ -167,6 +167,154 @@ def test_prefetching_loader_shapes_and_determinism():
     assert not np.array_equal(a["tokens"], b["tokens"])
 
 
+def _adapter_dag(width=4, stages=3):
+    """A stages x width fan-in DAG: every stage-s task reads all stage-(s-1)
+    outputs.  Stage 0 is inputless, so any adapter can start immediately."""
+    from repro.core import FileSpec, TaskSpec
+    GiB = 1 << 30
+    tasks, files, prev = {}, {}, []
+    tid = fid = 0
+    for s in range(stages):
+        new = []
+        for w in range(width):
+            files[fid] = FileSpec(id=fid, size=1 << 20, producer=tid)
+            tasks[tid] = TaskSpec(id=tid, abstract=f"s{s}w{w}", mem=2 * GiB,
+                                  cores=1.0, inputs=tuple(prev),
+                                  outputs=(fid,), priority=1.0 + w)
+            new.append(fid)
+            tid += 1
+            fid += 1
+        prev = new
+    return tasks, files
+
+
+def _adapter_nodes(n=3):
+    from repro.core import NodeState
+    GiB = 1 << 30
+    return {i: NodeState(i, 16 * GiB, 8.0) for i in range(n)}
+
+
+# ------------------------------------------------------------- mock RM
+@pytest.mark.parametrize("name", ["orig", "cws", "wow"])
+def test_mock_rm_completes_dag(name):
+    from repro.core import make_adapter
+    from repro.runtime import MockRMConfig, run_mock_rm
+    tasks, files = _adapter_dag()
+    ad = make_adapter(name, _adapter_nodes(), seed=3)
+    rep = run_mock_rm(ad, tasks, files, MockRMConfig(
+        latency_s=0.001, decline_prob=0.3, external_load=0.3, seed=3))
+    assert rep.completed == rep.tasks_total == len(tasks)
+    assert rep.declines > 0                 # the RM actually pushed back
+    assert rep.attempts_max > 1
+    assert rep.wall_s > 0
+
+
+def test_mock_rm_deterministic_counters():
+    """Decline decisions are keyed by (seed, task, attempt), so the wire
+    counters repeat exactly across runs even though asyncio interleaving
+    (hence completion order) may not."""
+    from repro.core import make_adapter
+    from repro.runtime import MockRMConfig, run_mock_rm
+    reps = []
+    for _ in range(2):
+        tasks, files = _adapter_dag()
+        ad = make_adapter("wow", _adapter_nodes(), seed=5)
+        reps.append(run_mock_rm(ad, tasks, files, MockRMConfig(
+            latency_s=0.0005, decline_prob=0.4, external_load=0.4, seed=5)))
+    a, b = reps
+    assert (a.completed, a.declines, a.capacity_declines) == \
+           (b.completed, b.declines, b.capacity_declines)
+
+
+def test_mock_rm_decline_storm_terminates():
+    """decline_prob=1.0 cannot livelock: the attempt cap force-accepts."""
+    from repro.core import make_adapter
+    from repro.runtime import MockRMConfig, run_mock_rm
+    tasks, files = _adapter_dag(width=2, stages=2)
+    ad = make_adapter("cws", _adapter_nodes(), seed=0)
+    cap = 3
+    rep = run_mock_rm(ad, tasks, files, MockRMConfig(
+        latency_s=0.0005, decline_prob=1.0, max_attempts=cap, seed=0))
+    assert rep.completed == len(tasks)
+    assert rep.attempts_max == cap + 1      # cap nacks, then force-accept
+    assert rep.declines == cap * len(tasks)
+
+
+def test_mock_rm_wow_registers_outputs():
+    """With the wow adapter, produced files land in the DPS on the
+    producing node -- the data path the sim engine also drives."""
+    from repro.core import make_adapter
+    from repro.runtime import MockRMConfig, run_mock_rm
+    tasks, files = _adapter_dag(width=3, stages=2)
+    ad = make_adapter("wow", _adapter_nodes(), seed=1)
+    rep = run_mock_rm(ad, tasks, files, MockRMConfig(latency_s=0.0005,
+                                                     seed=1))
+    assert rep.completed == len(tasks)
+    for fid in files:
+        assert ad.dps.has_file(fid)
+        assert ad.dps.locations(fid)
+
+
+# ------------------------------------------------------------- k8s dry-run
+def test_pod_manifest_shape():
+    import json
+    import re
+    from repro.core import TaskSpec
+    from repro.runtime import pod_manifest
+    t = TaskSpec(id=7, abstract="BWA_Index", mem=3 << 30, cores=1.5,
+                 inputs=(), priority=2.0)
+    pod = pod_manifest(t, 3)
+    sel = pod["spec"]["affinity"]["nodeAffinity"][
+        "requiredDuringSchedulingIgnoredDuringExecution"][
+        "nodeSelectorTerms"][0]["matchExpressions"][0]
+    assert sel["key"] == "kubernetes.io/hostname"
+    assert sel["values"] == ["node-3"]
+    res = pod["spec"]["containers"][0]["resources"]
+    assert res["requests"] == res["limits"]
+    assert res["requests"]["memory"] == str(3 << 30)
+    assert res["requests"]["cpu"] == "1500m"
+    assert re.fullmatch(r"[a-z0-9]([a-z0-9-]*[a-z0-9])?",
+                        pod["metadata"]["name"])
+    assert pod["metadata"]["labels"]["wow.repro/task-id"] == "7"
+    json.dumps(pod)                         # fully serializable
+
+
+def test_cop_job_manifest_shape():
+    import json
+    from repro.core import CopPlan, Transfer
+    from repro.runtime import cop_job_manifest
+    plan = CopPlan(id=11, task_id=4, target=2,
+                   transfers=[Transfer(file_id=9, size=1 << 20, src=0,
+                                       dst=2)],
+                   price=1.0, total_bytes=1 << 20)
+    job = cop_job_manifest(plan)
+    assert job["kind"] == "Job" and job["apiVersion"] == "batch/v1"
+    moved = json.loads(job["metadata"]["annotations"]["wow.repro/transfers"])
+    assert moved == [{"file": 9, "bytes": 1 << 20,
+                      "from": "node-0", "to": "node-2"}]
+    sel = job["spec"]["template"]["spec"]["affinity"]["nodeAffinity"][
+        "requiredDuringSchedulingIgnoredDuringExecution"][
+        "nodeSelectorTerms"][0]["matchExpressions"][0]
+    assert sel["values"] == ["node-2"]
+
+
+def test_k8s_dryrun_renders_schedule():
+    from repro.core import FileSpec, TaskSpec, make_adapter
+    from repro.runtime import K8sDryRun
+    ad = make_adapter("wow", _adapter_nodes(), c_node=0)
+    f = FileSpec(id=0, size=1 << 20, producer=-1)
+    ad.dps.register_file(f, 1)
+    ad.submit(TaskSpec(id=0, abstract="align", mem=2 << 30, cores=2.0,
+                       inputs=(0,), priority=1.0))
+    dry = K8sDryRun(ad)
+    (pod,) = dry.step()
+    assert pod["kind"] == "Pod"
+    assert pod["spec"]["affinity"]["nodeAffinity"][
+        "requiredDuringSchedulingIgnoredDuringExecution"][
+        "nodeSelectorTerms"][0]["matchExpressions"][0]["values"] == ["node-1"]
+    assert dry.to_json().startswith("[")
+
+
 def test_grad_compression_error_feedback():
     from repro.optim import AdamW, AdamWConfig
     import jax.numpy as jnp
