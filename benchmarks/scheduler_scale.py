@@ -66,6 +66,13 @@ Two further scenarios cover this PR's other step-1 paths:
   ``True`` (bit-identical action log + makespan asserted), recording the
   end-to-end before/after of the vectorized hot state.  Headline key
   ``e2e_vectorized``.
+* ``run_batched_drain`` -- the blocked step-2/3 placement kernel
+  (``core/copmatrix.py``) vs the pre-kernel masked path vs the per-task
+  dict oracle, on a fan-in drain workload (2-input tasks over 3-way
+  replicated files, cold burst + completion waves), flat and multi-site,
+  with every round's action stream asserted bit-identical and a
+  ``_BATCHED_MIN_SPEEDUP``x step-2/3 phase floor at the flat headline
+  point.  Headline key ``batched_drain``.
 
 Results land in BENCH_scheduler_scale.json; headline numbers are the
 sustained speedup and the phase times on the (1024 nodes, 4096 ready
@@ -77,6 +84,7 @@ from __future__ import annotations
 import contextlib
 import os
 import random
+import sys
 import time
 
 import repro.core.reference as _reference
@@ -592,6 +600,183 @@ def run_e2e_vectorized(sizes: list[tuple[int, float]] | None = None,
     return rows, headline
 
 
+# --------------------------------------------------- batched COP drain
+# The blocked step-2/3 placement kernel (core/copmatrix.py) vs the retained
+# per-task machinery, in the regime the kernel targets: a *fan-in drain*.
+# Every task needs two inputs that live on disjoint random hosts (so no
+# task is born prepared and step 1 cannot short-circuit the drain), each
+# input replicated 3 ways (so ``cop_feasible_targets`` stays unconstrained
+# -- a constrained pool legally bypasses the kernel).  A cold burst fills
+# the whole COP-slot budget through step-2 argmins over every node, then
+# each wave round finishes the entire running/in-flight set (a workflow
+# wave ending) and re-drains.  The single-event sustained stream of the
+# headline rows is the *wrong* regime for this kernel: one finished COP
+# frees one slot, so the per-task path touches ~1 candidate and there is
+# nothing to batch.
+#
+# Three impls, all the same ``WowScheduler``: ``blocked`` (batched=True),
+# ``masked`` (vectorized hot state, per-task loop -- the pre-kernel
+# production path, isolating this PR's gain from the earlier cap-array
+# PR's), and ``per_task`` (vectorized=False -- the dict oracle the kernel
+# is property-tested against).  ``phase_s["step23_s"]`` is directly
+# comparable across them; every schedule() round's action stream is
+# summarized and asserted bit-identical, flat *and* under a multi-site
+# topology (the locality-cost kernel branch, where the dict path pays a
+# per-candidate ``locality_missing_cost`` call).  ``BENCH_JAX=1`` adds the
+# jit-compiled winner reduction as a fourth impl (identity asserted, no
+# speedup claim -- jit dispatch only pays off on accelerators).  Full tier
+# asserts the blocked kernel's step-2/3 phase is >= ``_BATCHED_MIN_SPEEDUP``x
+# the per-task oracle at the flat headline point; the step-3 probe loop
+# stays scalar in all impls (every feasible probe consumes a COP id, see
+# scheduler.py), so the speedup is pure candidate-construction batching.
+BD_SIZES = [(512, 2048), (1024, 4096)]
+BD_SMOKE_SIZES = [(32, 128)]
+BD_WAVES = 3
+BD_TOPO: dict[str, dict | None] = {
+    "flat": None,
+    "site": {"rack_size": 32, "racks_per_site": 4, "oversubscription": 8.0},
+}
+_BD_IMPLS: dict[str, tuple[bool | None, bool | str]] = {
+    "blocked": (None, True),        # (vectorized, batched)
+    "masked": (None, False),
+    "per_task": (False, False),
+}
+_BATCHED_MIN_SPEEDUP = 2.0
+
+
+def _bd_submit(sched, dps, rng, n_nodes: int, tid: int, fid: int) -> int:
+    """Submit one fan-in task: two fresh inputs on disjoint random hosts,
+    each replicated 3 ways.  Returns the next free file id."""
+    for _ in range(2):
+        hosts = rng.sample(range(n_nodes), 3)
+        dps.register_file(FileSpec(id=fid, size=rng.randint(1, 4) * GiB,
+                                   producer=-1), hosts[0])
+        for h in hosts[1:]:
+            dps.add_replica(fid, h)
+        fid += 1
+    sched.submit(TaskSpec(id=tid, abstract="a", mem=TASK_MEM,
+                          cores=TASK_CORES, inputs=(fid - 2, fid - 1),
+                          priority=rng.uniform(1, 10)))
+    return fid
+
+
+def _bd_build(n_nodes: int, n_ready: int, vectorized, batched, topo_params,
+              seed: int = 0):
+    rng = random.Random(seed)
+    nodes = {i: NodeState(i, 128 * GiB, 16.0) for i in range(n_nodes)}
+    dps = DataPlacementService(seed=seed)
+    if topo_params is not None:
+        from repro.sim import Topology, TopologySpec
+        dps.set_topology(Topology(TopologySpec(**topo_params), n_nodes,
+                                  100.0))
+    sched = WowScheduler(nodes, dps, vectorized=vectorized, batched=batched)
+    fid = 10 ** 6                   # file ids disjoint from task ids
+    for t in range(n_ready):
+        fid = _bd_submit(sched, dps, rng, n_nodes, t, fid)
+    return sched, dps, rng, fid
+
+
+def _bd_wave(sched, dps, rng, n_nodes: int, next_id: int, fid: int):
+    """One drain wave: finish every running task and every in-flight COP
+    (a workflow wave ending), submit one fresh fan-in task per finished
+    task so the backlog stays fan-heavy, then schedule().  Returns
+    ``(actions, next_id, fid)``."""
+    finished = list(sched.running.items())
+    for tid, node in finished:
+        sched.on_task_finished(tid, node)
+    for cid in list(sched.active_cops):
+        sched.on_cop_finished(sched.active_cops[cid], ok=True)
+    for _ in range(len(finished)):
+        fid = _bd_submit(sched, dps, rng, n_nodes, next_id, fid)
+        next_id += 1
+    return sched.schedule(), next_id, fid
+
+
+def run_batched_drain(sizes: list[tuple[int, int]] | None = None,
+                      ) -> tuple[list[dict], dict]:
+    smoke = bench_smoke()
+    if sizes is None:
+        sizes = BD_SMOKE_SIZES if smoke else BD_SIZES
+    impls = dict(_BD_IMPLS)
+    if os.environ.get("BENCH_JAX"):
+        impls["jax"] = (None, "jax")
+    rows: list[dict] = []
+    step23: dict[tuple[int, str, str], float] = {}
+    speedups: dict[tuple[int, str], float] = {}
+    emit("scheduler_scale,batched_drain,impl,nodes,tasks,topo,"
+         "cold_step23_ms,step23_ms_total,round_ms,actions_per_round")
+    for n_nodes, n_ready in sizes:
+        for topo_name, params in BD_TOPO.items():
+            streams: dict[str, list] = {}
+            for impl, (vec, batched) in impls.items():
+                sched, dps, rng, fid = _bd_build(n_nodes, n_ready, vec,
+                                                 batched, params)
+                next_id = n_ready
+                t0 = time.perf_counter()
+                summaries = [_summarize(sched.schedule())]
+                cold_ms = sched.phase_s["step23_s"] * 1000
+                actions = 0
+                for _ in range(BD_WAVES):
+                    acts, next_id, fid = _bd_wave(sched, dps, rng,
+                                                  n_nodes, next_id, fid)
+                    summaries.append(_summarize(acts))
+                    actions += len(acts)
+                wall_ms = ((time.perf_counter() - t0) * 1000
+                           / (BD_WAVES + 1))
+                s23_ms = sched.phase_s["step23_s"] * 1000
+                streams[impl] = summaries
+                step23[(n_nodes, topo_name, impl)] = s23_ms
+                rows.append({"impl": impl, "scenario": "batched_drain",
+                             "nodes": n_nodes, "tasks": n_ready,
+                             "topo": topo_name, "cold_step23_ms": cold_ms,
+                             "step23_ms": s23_ms, "round_ms": wall_ms,
+                             "waves": BD_WAVES,
+                             "actions_per_round": actions / BD_WAVES})
+                emit(f"scheduler_scale,batched_drain,{impl},{n_nodes},"
+                     f"{n_ready},{topo_name},{cold_ms:.1f},{s23_ms:.1f},"
+                     f"{wall_ms:.1f},{actions / BD_WAVES:.1f}")
+            base = streams["per_task"]
+            for impl, stream in streams.items():
+                assert stream == base, (
+                    f"batched_drain@{n_nodes}/{topo_name}: {impl} kernel "
+                    f"diverged from the per-task oracle")
+            speedups[(n_nodes, topo_name)] = (
+                step23[(n_nodes, topo_name, "per_task")]
+                / max(step23[(n_nodes, topo_name, "blocked")], 1e-9))
+            emit(f"scheduler_scale,batched_drain_speedup_{n_nodes}n_"
+                 f"{topo_name},{speedups[(n_nodes, topo_name)]:.1f}x")
+    head_n = max(n for n, _ in sizes)
+    head_speedup = speedups[(head_n, "flat")]
+    # The floor is a claim about clean timings: cProfile's per-call hook
+    # taxes the two impls unequally (the dict path is call-heavy, the
+    # blocked path spends its time inside few numpy calls), so a
+    # `benchmarks.run --profile` pass measures the profiler, not the
+    # kernel -- warn instead of failing there.
+    profiled = sys.getprofile() is not None
+    if not smoke and not profiled:
+        assert head_speedup >= _BATCHED_MIN_SPEEDUP, (
+            f"batched_drain@{head_n}: blocked step-2/3 only "
+            f"{head_speedup:.2f}x the per-task path (floor "
+            f"{_BATCHED_MIN_SPEEDUP}x)")
+    elif profiled and head_speedup < _BATCHED_MIN_SPEEDUP:
+        emit(f"scheduler_scale,batched_drain_floor_skipped_under_profiler,"
+             f"{head_speedup:.2f}x")
+    headline = {
+        "sizes": [n for n, _ in sizes],
+        "impls": list(impls),
+        "topologies": list(BD_TOPO),
+        "waves": BD_WAVES,
+        "identical_actions": True,
+        "step23_ms": {f"{n}:{t}:{i}": ms
+                      for (n, t, i), ms in sorted(step23.items())},
+        "step23_speedup": {f"{n}:{t}": sp
+                           for (n, t), sp in sorted(speedups.items())},
+        "headline_nodes": head_n,
+        "headline_speedup": head_speedup,
+        "site_speedup": speedups[(head_n, "site")],
+    }
+    return rows, headline
+
 # ------------------------------------------------- hierarchical topology
 # Same full-workflow runs as sim_throughput, but under the hierarchical
 # topology layer (sim/topology.py): flat vs 2-level (racks, oversubscribed
@@ -716,7 +901,9 @@ def run_topology(sizes: list[tuple[int, float]] | None = None,
     fill_speedup = fill_eps["heap"] / max(fill_eps["scan"], 1e-9)
     emit(f"scheduler_scale,topology_fill_speedup_{n_fill}n,"
          f"{fill_speedup:.1f}x")
-    if not smoke:
+    # Same clean-timings-only rule as the batched_drain floor: under
+    # cProfile the ratio measures per-call hook overhead, not the fill.
+    if not smoke and sys.getprofile() is None:
         assert fill_speedup >= _TOPO_FILL_MIN_SPEEDUP, (
             f"topology@{n_fill}: path-constrained heap fill only "
             f"{fill_speedup:.2f}x the scan fill (floor "
@@ -1122,6 +1309,11 @@ def main() -> list[dict]:
     e2e_rows, e2e_head = run_e2e_vectorized()
     rows.extend(e2e_rows)
 
+    # blocked step-2/3 placement kernel vs the per-task dict oracle
+    # (per-round action bit-identity asserted, flat + multi-site)
+    bd_rows, bd_head = run_batched_drain()
+    rows.extend(bd_rows)
+
     # open-loop multi-tenant traffic: identical arrival streams, three
     # strategies, SLO/fairness service metrics
     mt_rows, mt_head = run_multi_tenant()
@@ -1171,6 +1363,7 @@ def main() -> list[dict]:
                      "sampled_recompute": rec_head,
                      "scale_speedup": rec_head["scale_speedup"],
                      "e2e_vectorized": e2e_head,
+                     "batched_drain": bd_head,
                      "multi_tenant": mt_head,
                      "topology": topo_head,
                      "live_rm": live,

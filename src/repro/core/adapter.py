@@ -275,7 +275,8 @@ class WowAdapter(RuntimeAdapter):
                  node_order: NodeOrder | None = None,
                  vectorized: bool | None = None,
                  strict_parity: bool = True,
-                 topology=None) -> None:
+                 topology=None,
+                 batched: bool | str | None = None) -> None:
         super().__init__(nodes)
         if node_order is None:
             node_order = NodeOrder(nodes)
@@ -294,7 +295,7 @@ class WowAdapter(RuntimeAdapter):
             self.sched = WowScheduler(
                 nodes, self.dps, c_node=c_node, c_task=c_task,
                 node_order=node_order, vectorized=vectorized,
-                strict_parity=strict_parity)
+                strict_parity=strict_parity, batched=batched)
         self._specs: dict[int, TaskSpec] = {}
 
     @property
@@ -360,7 +361,8 @@ def make_adapter(name: str, nodes: dict[int, NodeState], *, c_node: int = 1,
                  node_order: NodeOrder | None = None,
                  vectorized: bool | None = None,
                  strict_parity: bool = True,
-                 topology=None) -> RuntimeAdapter:
+                 topology=None,
+                 batched: bool | str | None = None) -> RuntimeAdapter:
     if name == "orig":
         return OrigAdapter(nodes)
     if name == "cws":
@@ -369,5 +371,6 @@ def make_adapter(name: str, nodes: dict[int, NodeState], *, c_node: int = 1,
         return WowAdapter(nodes, c_node=c_node, c_task=c_task, seed=seed,
                           reference_core=reference_core,
                           node_order=node_order, vectorized=vectorized,
-                          strict_parity=strict_parity, topology=topology)
+                          strict_parity=strict_parity, topology=topology,
+                          batched=batched)
     raise ValueError(f"unknown strategy {name!r}")

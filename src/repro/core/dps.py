@@ -107,6 +107,26 @@ class DataPlacementService:
         self._free_rep: dict[int, int] = {}            # file -> free replicas
         self._unsourced: dict[int, int] = {}           # task -> sourceless inputs
         self._blocked_dirty: set[int] = set()
+        # ----- batched-drain matrix (core/copmatrix.py): array mirrors of
+        # _present_cnt/_present_bytes, inert until enable_matrix() -- the
+        # owning scheduler calls it when its blocked step-2/3 kernel is on
+        self._mx = None
+
+    # -------------------------------------------------- batched-drain matrix
+    def enable_matrix(self):
+        """Attach (or rebuild) the :class:`~repro.core.copmatrix.CopMatrix`
+        mirror of the per-(task, node) present indices.  Idempotent; every
+        replica/tracking mutation below keeps it cell-exact with the dicts
+        once enabled."""
+        if self._mx is None:
+            from .copmatrix import CopMatrix
+            self._mx = CopMatrix()
+        self._mx.rebuild(self)
+        return self._mx
+
+    @property
+    def matrix(self):
+        return self._mx
 
     # -------------------------------------------------------------- topology
     def set_topology(self, topology) -> None:
@@ -197,6 +217,7 @@ class DataPlacementService:
             self._free_rep_up(file_id)
         spec = self._files.get(file_id)
         size = spec.size if spec is not None else 0
+        mx = self._mx
         for tid in self._waiting.get(file_id, _EMPTY):
             mult = self._task_mult[tid][file_id]
             cnt = self._present_cnt[tid]
@@ -204,6 +225,8 @@ class DataPlacementService:
             cnt[node] = c
             pbytes = self._present_bytes[tid]
             pbytes[node] = pbytes.get(node, 0) + size * mult
+            if mx is not None:
+                mx.cell_add(tid, node, mult, size * mult)
             if c == len(self._task_inputs[tid]):
                 self._prep.setdefault(tid, set()).add(node)
                 self._node_prep_tasks.setdefault(node, set()).add(tid)
@@ -222,6 +245,7 @@ class DataPlacementService:
             self._free_rep_down(file_id)
         spec = self._files.get(file_id)
         size = spec.size if spec is not None else 0
+        mx = self._mx
         for tid in self._waiting.get(file_id, _EMPTY):
             mult = self._task_mult[tid][file_id]
             cnt = self._present_cnt[tid]
@@ -234,6 +258,11 @@ class DataPlacementService:
             else:
                 cnt[node] = c
                 pbytes[node] = pbytes.get(node, 0) - size * mult
+            if mx is not None:
+                # same delta the dict applies; the pop above corresponds to
+                # the cell reaching exactly 0 (a removed file was added
+                # with the same mult), so cells stay == dict.get(node, 0)
+                mx.cell_sub(tid, node, mult, size * mult)
             if was_prep:
                 prep = self._prep.get(tid)
                 if prep is not None:
@@ -270,6 +299,8 @@ class DataPlacementService:
                 pbytes[n] = pbytes.get(n, 0) + size * m
         self._present_cnt[task_id] = cnt
         self._present_bytes[task_id] = pbytes
+        if self._mx is not None:
+            self._mx.track(task_id, cnt, pbytes)
         prep = {n for n, c in cnt.items() if c == len(inputs)}
         self._prep[task_id] = prep
         for n in prep:
@@ -281,6 +312,8 @@ class DataPlacementService:
             self._blocked_dirty.add(task_id)
 
     def untrack_task(self, task_id: int) -> None:
+        if self._mx is not None:
+            self._mx.untrack(task_id)
         self._unsourced.pop(task_id, None)
         self._blocked_dirty.discard(task_id)
         self._task_inputs.pop(task_id, ())
@@ -460,6 +493,8 @@ class DataPlacementService:
                     lost.append(fid)
         self._node_files.pop(node, None)
         self._node_prep_tasks.pop(node, None)
+        if self._mx is not None:
+            self._mx.drop_node(node)
         return lost
 
     def invalidate(self, file_id: int, only_valid: NodeId) -> None:

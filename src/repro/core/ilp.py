@@ -102,6 +102,27 @@ class AssignmentProblem:
 _MASK_MIN_CANDS = 16
 
 
+def _free_maps(nodes: Mapping[int, NodeState], n_ids,
+               cap) -> tuple[dict[int, int], dict[int, float]]:
+    """``{node: free_mem}`` / ``{node: free_cores}`` for the solver's
+    mutable capacity state.  With a capacity array attached and a
+    non-tiny node set, both maps come from one masked gather each
+    (``.tolist()`` yields plain Python ints/floats, so the values -- and
+    every subsequent comparison -- are identical to the attribute reads);
+    unknown ids fall back to the dict walk."""
+    ids = list(n_ids)
+    if cap is not None and len(ids) >= _MASK_MIN_CANDS:
+        try:
+            slots = cap.slots_of(ids)
+        except KeyError:          # a node left the mirror: dict fallback
+            pass
+        else:
+            return (dict(zip(ids, cap.free_mem[slots].tolist())),
+                    dict(zip(ids, cap.free_cores[slots].tolist())))
+    return ({n: nodes[n].free_mem for n in ids},
+            {n: nodes[n].free_cores for n in ids})
+
+
 def _feasible(problem: AssignmentProblem) -> AssignmentProblem:
     """Drop tasks with no prepared node that currently fits them.  With a
     capacity array attached, long candidate lists are filtered by one
@@ -144,8 +165,7 @@ def solve_exact(problem: AssignmentProblem,
     p = _feasible(problem)
     tasks = sorted(p.tasks, key=lambda t: -t.priority)
     n_ids = sorted({n for cands in p.prepared.values() for n in cands})
-    free_mem = {n: p.nodes[n].free_mem for n in n_ids}
-    free_cores = {n: p.nodes[n].free_cores for n in n_ids}
+    free_mem, free_cores = _free_maps(p.nodes, n_ids, p.cap)
 
     # suffix sums of priorities for the optimistic bound
     suffix = [0.0] * (len(tasks) + 1)
@@ -229,8 +249,7 @@ def solve_greedy(problem: AssignmentProblem) -> dict[int, int]:
     # the free dicts to them drops an O(all nodes) walk for callers that
     # pass the full node dict
     n_ids = {n for cands in p.prepared.values() for n in cands}
-    free_mem = {n: p.nodes[n].free_mem for n in n_ids}
-    free_cores = {n: p.nodes[n].free_cores for n in n_ids}
+    free_mem, free_cores = _free_maps(p.nodes, n_ids, p.cap)
     assign: dict[int, int] = {}
 
     def try_place(t: TaskSpec) -> bool:
@@ -414,7 +433,8 @@ def solve(problem: AssignmentProblem) -> dict[int, int]:
 # ------------------------------------------------------- fingerprint caching
 def component_fingerprint(tids, tasks: Mapping[int, TaskSpec],
                           cand: Mapping[int, list[int]],
-                          nodes: Mapping[int, NodeState]):
+                          nodes: Mapping[int, NodeState],
+                          cap=None):
     """Canonical fingerprint of one component: everything the tiered solve's
     decisions can depend on (task shapes, priorities, candidate structure,
     node free resources), expressed id-relative so isomorphic components
@@ -422,15 +442,30 @@ def component_fingerprint(tids, tasks: Mapping[int, TaskSpec],
     are included because greedy tie-breaks on task id and candidate order
     tie-breaks on node id.  Returns ``(fp, nlist, npos)`` where ``nlist`` is
     the component's node ids ascending and ``npos`` their positions, the
-    coordinates :class:`FingerprintCache` encodes assignments in."""
+    coordinates :class:`FingerprintCache` encodes assignments in.  With a
+    capacity array the node free tuples come from one gather (plain Python
+    ints/floats via ``.tolist()``, so fingerprints compare equal across the
+    gathered and walked forms)."""
     nlist = sorted({n for c in cand.values() for n in c})
     npos = {n: i for i, n in enumerate(nlist)}
     id_rank = {t: i for i, t in enumerate(sorted(tids))}
+    node_fp = None
+    if cap is not None and len(nlist) >= _MASK_MIN_CANDS:
+        try:
+            slots = cap.slots_of(nlist)
+        except KeyError:          # a node left the mirror: dict fallback
+            pass
+        else:
+            node_fp = tuple(zip(cap.free_mem[slots].tolist(),
+                                cap.free_cores[slots].tolist()))
+    if node_fp is None:
+        node_fp = tuple((nodes[n].free_mem, nodes[n].free_cores)
+                        for n in nlist)
     fp = (
         tuple((id_rank[t], tasks[t].mem, tasks[t].cores,
                tasks[t].priority,
                tuple(npos[n] for n in cand[t])) for t in tids),
-        tuple((nodes[n].free_mem, nodes[n].free_cores) for n in nlist),
+        node_fp,
     )
     return fp, nlist, npos
 
@@ -609,7 +644,8 @@ class IncrementalAssignmentSolver:
     # -------------------------------------------------------------- helpers
     def _solve_comp(self, tids, tasks, candidates, prev):
         cand = {t: candidates[t] for t in tids}
-        fp, nlist, npos = component_fingerprint(tids, tasks, cand, self.nodes)
+        fp, nlist, npos = component_fingerprint(tids, tasks, cand, self.nodes,
+                                                cap=self.cap)
         hit = self._cache.get(fp, tids, nlist)
         if hit is not None:
             self.stats["cache_hits"] += 1

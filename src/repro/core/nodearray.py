@@ -75,6 +75,12 @@ class NodeCapacityArray:
         self.alive = np.zeros(cap, dtype=bool)
         self._n = 0          # slots handed out (live + dead)
         self._dead = 0
+        # bumped whenever the node->slot mapping changes shape (append or
+        # compaction); consumers caching slot-indexed derived arrays
+        # (core/copmatrix.SlotColMap, tier ids) rebuild on it.  Plain drops
+        # only mask `alive` and need no bump -- stale derived entries for
+        # dead slots are unreachable through alive-rooted masks.
+        self.version = 0
         for nid in order:    # canonical enumeration = slot order
             self.add(nid, nodes[nid])
 
@@ -95,6 +101,7 @@ class NodeCapacityArray:
             self._grow()
         s = self._n
         self._n += 1
+        self.version += 1
         self.slot_of[node] = s
         self._node_of[s] = node
         self.alive[s] = True
@@ -131,6 +138,7 @@ class NodeCapacityArray:
         self.alive[m:self._n] = False
         self._n = m
         self._dead = 0
+        self.version += 1
         ids = self._node_of[:m].tolist()
         self.slot_of = {nid: i for i, nid in enumerate(ids)}
 

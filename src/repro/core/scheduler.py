@@ -62,6 +62,21 @@ remaining per-event O(backlog) scans:
     ``sorted(self.nodes)`` and defines candidate/iteration order the same
     way the reference's ``list(self.nodes)`` scans do, lifting the old
     "node ids ascend" convention (nodes may re-join under old ids).
+  * **Batched COP drain** (``batched=True``, default whenever
+    ``vectorized``; DESIGN.md "Batched COP drain").  The DPS maintains a
+    dense (task x node-slot) present-count / present-bytes matrix
+    (`core.copmatrix.CopMatrix`) at its replica-mutation choke points, and
+    a `core.copmatrix.BlockedDrainKernel` replaces the per-task inner
+    machinery of steps 2-3: candidate masks, missing-bytes / locality-cost
+    rows and the step-2 argmin become array expressions in canonical slot
+    order, with staged reductions that split float ties exactly as the
+    dict tuple-compare.  Only the *winning* step-2 probe reaches scalar
+    ``plan_cop`` (provably always feasible for the unconstrained pool), so
+    COP-id and tie-break RNG consumption is unchanged; step-3 keeps its
+    scalar probe-all loop (each feasible probe consumes a COP id) and only
+    the candidate construction is blocked.  The per-task dict machinery is
+    retained verbatim as the oracle (``batched=False``), property-tested
+    bit-identical; constrained pools always take the oracle path.
 
 Decisions are bit-identical to ``core.reference.ReferenceWowScheduler``
 (equivalence-tested), with one deliberate, documented exception: where the
@@ -100,6 +115,7 @@ class WowScheduler:
         node_order: NodeOrder | None = None,
         vectorized: bool | None = None,
         strict_parity: bool = True,
+        batched: bool | str | None = None,
     ) -> None:
         self.nodes = nodes
         self.dps = dps
@@ -119,6 +135,19 @@ class WowScheduler:
             raise RuntimeError("vectorized=True requires numpy; "
                                "pass vectorized=False (dict path) instead")
         self.vectorized = bool(vectorized)
+        # batched step-2/3 drain (DESIGN.md "Batched COP drain"): None =
+        # auto (on exactly when the node state is vectorized), "jax" = the
+        # jitted winner-reduction twin (requires jax + x64).  The per-task
+        # dict machinery is the retained oracle; decisions are bit-identical
+        # either way (property-tested in tests/test_copmatrix.py).
+        if batched is None:
+            batched = self.vectorized
+        if batched and not self.vectorized:
+            raise RuntimeError("batched drain requires vectorized node "
+                               "state; pass batched=False (per-task "
+                               "oracle) instead")
+        self.batched = bool(batched)
+        self._batched_jax = batched == "jax"
         # canonical node enumeration order; the environment passes its own
         # (sim/engine.py owns one), standalone use derives it from the dict
         self.node_order = node_order if node_order is not None \
@@ -129,6 +158,10 @@ class WowScheduler:
         self.active_cops: dict[int, CopPlan] = {}
         self.cops_per_task: dict[int, int] = {}
         self.inflight_targets: set[tuple[int, int]] = set()  # (task, node)
+        # per-task view of inflight_targets (task -> target nodes), updated
+        # at the same two choke points; the blocked kernel clears these few
+        # mask entries instead of testing (tid, n) per candidate
+        self._inflight_by_task: dict[int, set[int]] = {}
         self._finished_specs: dict[int, TaskSpec] = {}
         # metrics hooks
         self.cops_created: int = 0
@@ -170,6 +203,13 @@ class WowScheduler:
         # components are re-solved per event, the rest are reused
         self._solver = IncrementalAssignmentSolver(
             nodes, strict_parity=self.strict_parity, cap=self._cap_array)
+        if self.batched:
+            from .copmatrix import BlockedDrainKernel
+            self._kernel = BlockedDrainKernel(
+                self._cap_array, self.dps.enable_matrix(), c_node,
+                self._inflight_by_task, use_jax=self._batched_jax)
+        else:
+            self._kernel = None
 
     # ------------------------------------------------------------- events
     def submit(self, task: TaskSpec) -> None:
@@ -214,6 +254,11 @@ class WowScheduler:
             if state.active_cops < self.c_node:
                 self._slot_freed(n)
         self.inflight_targets.discard((plan.task_id, plan.target))
+        infl = self._inflight_by_task.get(plan.task_id)
+        if infl is not None:
+            infl.discard(plan.target)
+            if not infl:
+                del self._inflight_by_task[plan.task_id]
         if ok:
             self.dps.commit_cop(plan)   # marks consumer tasks dirty in DPS
 
@@ -534,7 +579,7 @@ class WowScheduler:
         greedy answers never collide with tiered answers of an isomorphic
         small component."""
         fp, nlist, npos = component_fingerprint(
-            tids, self.ready, cand, self.nodes)
+            tids, self.ready, cand, self.nodes, cap=self._cap_array)
         fp = ("trunc", fp)
         hit = self._less_cache.get(fp, tids, nlist)
         if hit is not None:
@@ -612,7 +657,7 @@ class WowScheduler:
         stateless solve, answered via the canonical fingerprint cache when
         the subproblem recurred."""
         fp, nlist, npos = component_fingerprint(
-            tids, self.ready, cand, self.nodes)
+            tids, self.ready, cand, self.nodes, cap=self._cap_array)
         hit = self._less_cache.get(fp, tids, nlist)
         if hit is not None:
             self.inputless_stats["cache_hits"] += 1
@@ -725,6 +770,7 @@ class WowScheduler:
             if state.active_cops >= self.c_node:
                 self._slot_busy(n)
         self.inflight_targets.add((plan.task_id, plan.target))
+        self._inflight_by_task.setdefault(plan.task_id, set()).add(plan.target)
         self.cops_created += 1
         actions.append(StartCop(plan))
 
@@ -746,6 +792,9 @@ class WowScheduler:
             return
         self._sync_ready_index()
         dps = self.dps
+        kern = self._kernel
+        if kern is not None:
+            kern.begin()
         for tid in self._ready_index.step2_order():
             if not self._free_slot_nodes:
                 break               # no COP can start or source anywhere
@@ -755,44 +804,76 @@ class WowScheduler:
             feas, pool = self._cop_target_pool(t)
             if pool is None:
                 continue
-            # nodes with free compute capacity, spare COP slot, not already
-            # prepared / being prepared
-            prepped = dps.prepared_node_set(tid)
-            inflight = self.inflight_targets
-            if self._cap_array is not None and pool is self._free_slot_nodes:
-                # whole free-slot pool: one masked array scan replaces the
-                # per-node fits() walk (identical set; the sort below fixes
-                # the order either way)
-                base = self._cap_array.free_slot_fit_ids(t.mem, t.cores)
+            if kern is not None and pool is self._free_slot_nodes:
+                # blocked kernel (DESIGN.md "Batched COP drain"): the whole
+                # candidate mask + cost row + staged argmin as array ops.
+                # An unconstrained pool means feas is None, and then the
+                # probe on *any* candidate target always succeeds (every
+                # input has an admissible free-slot source, and a source
+                # that is the target cannot be needed -- the file would not
+                # be missing there), so the dict path's probe loop stops at
+                # its first, minimum-key candidate: exactly the winner.
+                winner = kern.step2_winner(tid, t, dps)
+                if winner is None:
+                    continue        # empty candidate set: oracle starts none
+                if winner >= 0:
+                    plan = dps.plan_cop(tid, t.inputs, winner,
+                                        self._free_slot_nodes,
+                                        feasible_targets=feas)
+                    if plan is not None:
+                        self._start_cop(plan, actions)
+                        continue
+                # winner == -1 (untracked row) or -- unreachable by the
+                # invariant above -- an infeasible winning probe: fall
+                # through to the per-task oracle (re-probing the winner is
+                # harmless, infeasible probes are side-effect-free)
+            self._step2_probe_task(tid, t, feas, pool, actions)
+
+    def _step2_probe_task(self, tid: int, t: TaskSpec, feas, pool,
+                          actions: list[Action]) -> None:
+        """Per-task step-2 machinery -- the retained dict oracle the blocked
+        kernel is property-tested bit-identical against, and the live path
+        for constrained pools (``pool is not _free_slot_nodes``), for
+        ``batched=False``, and for the kernel's defensive fallthrough."""
+        dps = self.dps
+        # nodes with free compute capacity, spare COP slot, not already
+        # prepared / being prepared
+        prepped = dps.prepared_node_set(tid)
+        inflight = self.inflight_targets
+        if self._cap_array is not None and pool is self._free_slot_nodes:
+            # whole free-slot pool: one masked array scan replaces the
+            # per-node fits() walk (identical set; the sort below fixes
+            # the order either way)
+            base = self._cap_array.free_slot_fit_ids(t.mem, t.cores)
+        else:
+            base = [n for n in pool if self.nodes[n].fits(t)]
+        cands = [n for n in base
+                 if (tid, n) not in inflight and n not in prepped]
+        if not cands:
+            return
+        # earliest start ~ fewest missing bytes (paper §IV-C).  Most
+        # candidates hold none of the task's inputs and share the key
+        # (task_bytes, n), so when *no* node holds input bytes the sort
+        # degenerates to plain id order -- same result, no key calls.
+        # Under a hierarchical topology the metric is locality-weighted
+        # missing bytes: a same-rack replica beats a WAN one.
+        if dps.topology is not None:
+            cost = dps.locality_missing_cost
+            cands.sort(key=lambda n: (cost(tid, n), n))
+        else:
+            present = dps.present_bytes_map(tid)
+            if present:
+                tb = dps.task_input_bytes(tid)
+                get = present.get
+                cands.sort(key=lambda n: (tb - get(n, 0), n))
             else:
-                base = [n for n in pool if self.nodes[n].fits(t)]
-            cands = [n for n in base
-                     if (tid, n) not in inflight and n not in prepped]
-            if not cands:
-                continue
-            # earliest start ~ fewest missing bytes (paper §IV-C).  Most
-            # candidates hold none of the task's inputs and share the key
-            # (task_bytes, n), so when *no* node holds input bytes the sort
-            # degenerates to plain id order -- same result, no key calls.
-            # Under a hierarchical topology the metric is locality-weighted
-            # missing bytes: a same-rack replica beats a WAN one.
-            if dps.topology is not None:
-                cost = dps.locality_missing_cost
-                cands.sort(key=lambda n: (cost(tid, n), n))
-            else:
-                present = dps.present_bytes_map(tid)
-                if present:
-                    tb = dps.task_input_bytes(tid)
-                    get = present.get
-                    cands.sort(key=lambda n: (tb - get(n, 0), n))
-                else:
-                    cands.sort()
-            for n in cands:
-                plan = dps.plan_cop(tid, t.inputs, n, self._free_slot_nodes,
-                                    feasible_targets=feas)
-                if plan is not None:
-                    self._start_cop(plan, actions)
-                    break
+                cands.sort()
+        for n in cands:
+            plan = dps.plan_cop(tid, t.inputs, n, self._free_slot_nodes,
+                                feasible_targets=feas)
+            if plan is not None:
+                self._start_cop(plan, actions)
+                break
 
     # Step 3: use leftover network capacity to speculatively prepare
     # high-priority tasks on compute-busy nodes.
@@ -802,6 +883,9 @@ class WowScheduler:
         self._sync_ready_index()
         dps = self.dps
         order = self.node_order
+        kern = self._kernel
+        if kern is not None:
+            kern.begin()
         for tid in self._ready_index.step3_order():
             if not self._free_slot_nodes:
                 break
@@ -814,15 +898,26 @@ class WowScheduler:
             # canonical order: the reference probes nodes in enumeration
             # order and plan_cop consumes tie-break randomness per feasible
             # probe, so the probe order is decision-relevant.  The masked
-            # scan yields slot order, which *is* canonical order.
-            prepped = dps.prepared_node_set(tid)
-            inflight = self.inflight_targets
-            if self._cap_array is not None and pool is self._free_slot_nodes:
+            # scan yields slot order, which *is* canonical order.  Unlike
+            # step 2 the probe loop itself cannot be batched: every
+            # *feasible* probe consumes a COP id (and possibly a tie-break
+            # RNG draw) whether or not it wins, so the blocked kernel only
+            # replaces candidate-mask construction.
+            cands = None
+            if kern is not None and pool is self._free_slot_nodes:
+                cands = kern.step3_candidates(tid, t)
+            if cands is not None:
+                pass
+            elif self._cap_array is not None and pool is self._free_slot_nodes:
+                prepped = dps.prepared_node_set(tid)
+                inflight = self.inflight_targets
                 cands = [
                     n for n in self._cap_array.free_slot_total_fit_ids(
                         t.mem, t.cores)
                     if (tid, n) not in inflight and n not in prepped]
             else:
+                prepped = dps.prepared_node_set(tid)
+                inflight = self.inflight_targets
                 cands = order.sort(
                     n for n in pool
                     if (tid, n) not in inflight

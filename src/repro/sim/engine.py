@@ -60,6 +60,11 @@ class SimConfig:
     # numpy is importable), False = retained dict oracle.  Decisions are
     # bit-identical either way (DESIGN.md "Vectorized hot state").
     vectorized: bool | None = None
+    # batched COP drain in the wow scheduler: None = auto (on exactly when
+    # vectorized), False = per-task dict oracle, "jax" = jitted winner
+    # reduction.  Decisions are bit-identical in all modes (DESIGN.md
+    # "Batched COP drain").
+    batched: bool | str | None = None
     # hierarchical topology (sim/topology.py): nodes -> racks -> sites with
     # oversubscribed shared links.  None -- or a flat spec (single rack) --
     # keeps the engine bit-identical to the pre-topology goldens.
@@ -126,7 +131,7 @@ class Simulation:
             strategy, self.nodes, c_node=cfg.c_node, c_task=cfg.c_task,
             seed=cfg.seed, reference_core=cfg.reference_core,
             node_order=self.node_order, vectorized=cfg.vectorized,
-            topology=self.topo)
+            topology=self.topo, batched=cfg.batched)
 
         extra: tuple[int, ...] = ()
         self.nfs_server = cfg.n_nodes

@@ -107,6 +107,8 @@ class Topology:
                         / spec.core_oversubscription)
         self.wan_bw = spec.wan_bw if spec.wan_bw is not None \
             else self.rack_up_bw
+        # (src rack, dst rack) -> hierarchy-path segment (see `path`)
+        self._path_cache: dict[tuple[int, int], tuple[LinkId, ...]] = {}
 
     # ------------------------------------------------------------ hierarchy
     @property
@@ -160,7 +162,23 @@ class Topology:
 
     # ----------------------------------------------------------------- links
     def path(self, src: int, dst: int) -> tuple[LinkId, ...]:
-        """Hierarchy links between ``("up", src)`` and ``("down", dst)``."""
+        """Hierarchy links between ``("up", src)`` and ``("down", dst)``.
+
+        Memoized per (src rack, dst rack) pair -- the segment is a pure
+        function of the two rack coordinates, but ``expand`` calls this
+        once per up->down hop of every flow the engine builds, so without
+        the cache the splice tuple is re-derived on every ``_add_flow``.
+        The cache is unbounded but tiny: at most ``n_racks ** 2`` entries
+        (elastic joins only add racks).  ``_path_uncached`` is the retained
+        oracle the cache is asserted against in tests/test_topology.py."""
+        key = (self.rack_of(src), self.rack_of(dst))
+        hit = self._path_cache.get(key)
+        if hit is None:
+            hit = self._path_uncached(src, dst)
+            self._path_cache[key] = hit
+        return hit
+
+    def _path_uncached(self, src: int, dst: int) -> tuple[LinkId, ...]:
         r_src, r_dst = self.rack_of(src), self.rack_of(dst)
         if r_src == r_dst:
             return ()

@@ -1,0 +1,16 @@
+"""Import blocker for the no-numpy CI leg (see .github/workflows/ci.yml).
+
+Putting this directory first on PYTHONPATH makes every ``import numpy``
+execute this module, which raises the same ``ModuleNotFoundError`` a bare
+container raises -- so the suite runs with every optional-numpy guard
+(``HAVE_NUMPY`` in core/nodearray.py, core/copmatrix.py, tests/_hyp.py)
+taking its stdlib branch, and the ``vectorized=False`` / ``batched=False``
+dict oracles are exercised end-to-end in CI rather than only locally.
+
+A module that raises during import is removed from ``sys.modules``, so the
+error re-raises on every subsequent import -- no caching subtleties.  jax
+(which imports numpy) is blocked transitively.
+"""
+raise ModuleNotFoundError("No module named 'numpy' (blocked by "
+                          "tests/_no_numpy_shim for the no-numpy CI leg)",
+                          name="numpy")

@@ -6,8 +6,9 @@ import pytest
 from _hyp import given, settings, st
 
 from repro.core import (AssignmentProblem, DataPlacementService, FileSpec,
-                        NodeState, TaskSpec, abstract_ranks,
-                        priority_value, solve, solve_exact, solve_greedy)
+                        NodeState, StartCop, TaskSpec, WowScheduler,
+                        abstract_ranks, priority_value, solve, solve_exact,
+                        solve_greedy)
 from repro.core.ilp import objective
 
 GiB = 1024 ** 3
@@ -235,3 +236,36 @@ def test_dps_greedy_balances_sources(seed, n_nodes, n_files):
         loads[t.src] = loads.get(t.src, 0) + t.size
     total = sum(sizes)
     assert max(loads.values()) <= total / n_nodes + max(sizes)
+
+
+# ------------------------------------------- step-2 partial-present sort
+@pytest.mark.parametrize("vectorized", [False, None])
+def test_step2_partial_present_bytes_order(vectorized):
+    """Step-2's *mixed* sort branch: some candidates hold input bytes, some
+    none -- the key is ``(task_bytes - present.get(n, 0), n)``, so the node
+    missing the fewest bytes wins and equal-missing ties split by node id.
+    (The all-empty and topology branches are pinned elsewhere.)"""
+    MB = 1024 ** 2
+    nodes = {i: NodeState(i, mem=8 * GiB, cores=8.0) for i in range(4)}
+    dps = DataPlacementService(seed=0)
+    # file A (100 MB) on nodes 2 and 3; file B (50 MB) on node 1; node 0
+    # holds nothing.  Missing bytes: n0=150M, n1=100M, n2=50M, n3=50M.
+    dps.register_file(FileSpec(1, 100 * MB, 0), 2)
+    dps.add_replica(1, 3)
+    dps.register_file(FileSpec(2, 50 * MB, 0), 1)
+    sched = WowScheduler(nodes, dps, c_task=1, vectorized=vectorized)
+    sched.submit(TaskSpec(id=1, abstract="a", mem=GiB, cores=1.0,
+                          inputs=(1, 2), priority=1.0))
+    actions = sched.schedule()
+    cops = [a for a in actions if isinstance(a, StartCop)]
+    assert len(cops) == 1
+    plan = cops[0].plan
+    # the dict oracle's own key, computed independently
+    present = dps.present_bytes_map(1)
+    tb = dps.task_input_bytes(1)
+    oracle = min(nodes, key=lambda n: (tb - present.get(n, 0), n))
+    assert oracle == 2          # tie between 2 and 3 splits by id
+    assert plan.target == 2
+    # node 2 already holds A, so the COP moves exactly file B from node 1
+    assert [(t.file_id, t.src, t.dst) for t in plan.transfers] == \
+        [(2, 1, 2)]

@@ -98,6 +98,24 @@ def test_path_construction():
                             ("wand", 1), ("core", 1), ("rkd", 3))
 
 
+def test_path_cache_matches_uncached_oracle():
+    """The per-(rack, rack) ``path`` memo must be invisible: every node
+    pair returns exactly what the retained ``_path_uncached`` oracle
+    derives, and the cache holds at most one entry per rack pair."""
+    t = _topo8()
+    assert t._path_cache == {}              # lazy: nothing precomputed
+    for src in range(8):
+        for dst in range(8):
+            assert t.path(src, dst) == t._path_uncached(src, dst)
+    # 4 racks -> at most 16 entries, and hits are the cached objects
+    assert 0 < len(t._path_cache) <= 16
+    for (r_src, r_dst), links in t._path_cache.items():
+        assert t.path(2 * r_src, 2 * r_dst) is links
+    # expand routes through the cache: same splice, warm or cold
+    links = (("up", 1), ("down", 6), ("up", 6), ("down", 3))
+    assert t.expand(links) == _topo8().expand(links)
+
+
 def test_expand_splices_every_up_down_pair():
     t = _topo8()
     # intra-rack transfer: untouched

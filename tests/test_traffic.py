@@ -162,6 +162,7 @@ def test_traffic_run_replays_bit_identically(strategy, seed):
 
 def test_traffic_vectorized_parity():
     """wow's vectorized and dict hot-state paths agree under traffic."""
+    pytest.importorskip("numpy", reason="vectorized=True requires numpy")
     tr = _small_traffic(seed=3, max_backlog=4)
     outs = {}
     for vec in (False, True):
